@@ -1,0 +1,50 @@
+"""Shared benchmark plumbing: memoized traces/simulations + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows.  For the CGRA
+simulator benchmarks, ``us_per_call`` is the *simulated* kernel time at the
+paper's 704 MHz HyCUBE clock (cycles / 704); ``derived`` carries the
+headline metric for that figure (speedup / utilization / rate).
+"""
+from __future__ import annotations
+
+import functools
+import os
+import sys
+
+from repro.core.cgra import KERNELS, SimConfig, Stats, presets, simulate
+from repro.core.cgra.trace import Trace
+
+MHZ = 704.0  # HyCUBE clock (Table 3)
+
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+
+#: the paper's Table-1 kernel list (order matches the figures)
+PAPER_KERNELS = [
+    "gcn_citeseer", "gcn_cora", "gcn_pubmed", "gcn_ogbn_arxiv",
+    "grad", "perm_sort", "radix_hist", "radix_update", "rgb", "src2dest",
+]
+if QUICK:
+    PAPER_KERNELS = ["gcn_cora", "grad", "radix_hist", "rgb"]
+
+
+@functools.lru_cache(maxsize=None)
+def trace(name: str) -> Trace:
+    return KERNELS[name]()
+
+
+@functools.lru_cache(maxsize=None)
+def sim(name: str, cfg: SimConfig) -> Stats:
+    return simulate(trace(name), cfg)
+
+
+def row(name: str, cycles_or_us: float, derived: str, *,
+        cycles: bool = True) -> None:
+    us = cycles_or_us / MHZ if cycles else cycles_or_us
+    print(f"{name},{us:.2f},{derived}", flush=True)
+
+
+def geomean(xs) -> float:
+    prod = 1.0
+    for x in xs:
+        prod *= x
+    return prod ** (1.0 / max(1, len(xs)))

@@ -1,0 +1,46 @@
+"""Fig. 11a/b: execution time across memory systems + access distribution.
+
+Paper claims: Cache+SPM ~10x over the size-equivalent SPM-only design with
+77% fewer DRAM accesses; runahead adds 3.04x (up to 6.91x).  The A72/SIMD
+CPU baselines are out of scope (they need a CPU microarchitecture simulator,
+orthogonal to the paper's contribution — EXPERIMENTS.md §Paper-validation).
+"""
+from __future__ import annotations
+
+from . import common
+from repro.core.cgra import presets
+
+
+def run() -> dict:
+    speed_cache, speed_ra, dram_drop = [], [], []
+    for name in common.PAPER_KERNELS:
+        spm = common.sim(name, presets.SPM_ONLY_133K)
+        cache = common.sim(name, presets.CACHE_SPM)
+        ra = common.sim(name, presets.RUNAHEAD)
+        sc = spm.cycles / cache.cycles
+        sr = cache.cycles / ra.cycles
+        speed_cache.append(sc)
+        speed_ra.append(sr)
+        if spm.dram_accesses:
+            dram_drop.append(1 - cache.dram_accesses / spm.dram_accesses)
+        common.row(f"fig11a/{name}/spm_only_133k", spm.cycles, "norm=1.0")
+        common.row(f"fig11a/{name}/cache_spm", cache.cycles,
+                   f"speedup_vs_spm={sc:.2f}x")
+        common.row(f"fig11a/{name}/runahead", ra.cycles,
+                   f"speedup_vs_cache={sr:.2f}x")
+        common.row(
+            f"fig11b/{name}", 0,
+            f"spm_acc={cache.spm_accesses};l1_hit={cache.l1_hits};"
+            f"l2_hit={cache.l2_hits};dram={cache.dram_accesses};"
+            f"dram_spm_only={spm.dram_accesses}", cycles=False)
+    gm_c = common.geomean(speed_cache)
+    gm_r = common.geomean(speed_ra)
+    avg_drop = sum(dram_drop) / max(1, len(dram_drop))
+    common.row("fig11a/geomean_cache_vs_spm", 0,
+               f"{gm_c:.2f}x;paper=10x", cycles=False)
+    common.row("fig11a/geomean_runahead", 0,
+               f"{gm_r:.2f}x;paper=3.04x", cycles=False)
+    common.row("fig11b/avg_dram_reduction", 0,
+               f"{avg_drop:.0%};paper=77%", cycles=False)
+    return {"cache_speedup": gm_c, "runahead_speedup": gm_r,
+            "dram_reduction": avg_drop}

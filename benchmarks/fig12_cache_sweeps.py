@@ -1,0 +1,76 @@
+"""Fig. 12: cache-parameter sweeps + the 1.27% storage-equivalence result.
+
+Paper claims: associativity saturates ~8 (12a), line size ~64B (12b), MSHR
+~4 for demand misses (12d), SPM size has little effect (12e), and Cache+SPM
+matches a scaled SPM-only system with only 1.27% of the storage (12f).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from . import common
+from repro.core.cgra import presets, simulate
+from repro.core.cgra.cache import CacheConfig
+
+SWEEP_KERNELS = common.PAPER_KERNELS[:4] if not common.QUICK else \
+    common.PAPER_KERNELS[:2]
+
+
+def _cfg(base, **l1kw):
+    return dataclasses.replace(base, l1=base.l1.replace(**l1kw))
+
+
+def run() -> dict:
+    base = presets.CACHE_SPM
+    out = {}
+
+    for assoc in (1, 2, 4, 8, 16):
+        for name in SWEEP_KERNELS:
+            s = common.sim(name, _cfg(base, ways=assoc))
+            common.row(f"fig12a/{name}/assoc_{assoc}", s.cycles,
+                       f"hit_rate={s.l1_hit_rate:.3f}")
+
+    for line in (16, 32, 64, 128):
+        cfg = dataclasses.replace(
+            base, l1=base.l1.replace(line=line),
+            l2=base.l2.replace(line=max(line, base.l2.line)))
+        for name in SWEEP_KERNELS:
+            s = common.sim(name, cfg)
+            common.row(f"fig12b/{name}/line_{line}", s.cycles,
+                       f"hit_rate={s.l1_hit_rate:.3f}")
+
+    for ways, way_bytes in ((4, 256), (4, 512), (4, 1024), (4, 2048), (8, 2048)):
+        size = ways * way_bytes
+        for name in SWEEP_KERNELS:
+            s = common.sim(name, _cfg(base, ways=ways, way_bytes=way_bytes))
+            common.row(f"fig12c/{name}/l1_{size}B", s.cycles,
+                       f"hit_rate={s.l1_hit_rate:.3f}")
+
+    for mshr in (1, 2, 4, 8, 16):
+        for name in SWEEP_KERNELS:
+            s = common.sim(name, dataclasses.replace(base, mshr=mshr))
+            common.row(f"fig12d/{name}/mshr_{mshr}", s.cycles, "demand-only")
+
+    for spm in (512, 1024, 2048, 4096, 8192):
+        for name in SWEEP_KERNELS:
+            s = common.sim(name, dataclasses.replace(base, spm_bytes=spm))
+            common.row(f"fig12e/{name}/spm_{spm}B", s.cycles, "")
+
+    # 12f: scale SPM-only until it matches the small Cache+SPM system (Cora)
+    target = common.sim("gcn_cora", presets.STORAGE_EXP)
+    cache_storage = presets.STORAGE_EXP.storage_bytes()
+    match_bytes = None
+    for spm_kb in (8, 16, 32, 64, 96, 128, 160, 192, 224, 256, 320):
+        cfg = dataclasses.replace(presets.SPM_ONLY_133K,
+                                  spm_bytes=spm_kb * 1024)
+        s = common.sim("gcn_cora", cfg)
+        common.row(f"fig12f/spm_only_{spm_kb}KB", s.cycles,
+                   f"vs_cache_spm={s.cycles / target.cycles:.2f}x")
+        if match_bytes is None and s.cycles <= target.cycles:
+            match_bytes = spm_kb * 1024
+    if match_bytes:
+        ratio = cache_storage / match_bytes
+        common.row("fig12f/storage_ratio", 0,
+                   f"{ratio:.2%};paper=1.27%", cycles=False)
+        out["storage_ratio"] = ratio
+    return out

@@ -1,0 +1,20 @@
+"""Fig. 13: runahead speedup per kernel (paper: avg 3.04x, max 6.91x)."""
+from __future__ import annotations
+
+from . import common
+from repro.core.cgra import presets
+
+
+def run() -> dict:
+    speedups = []
+    for name in common.PAPER_KERNELS:
+        cache = common.sim(name, presets.CACHE_SPM)
+        ra = common.sim(name, presets.RUNAHEAD)
+        sp = cache.cycles / ra.cycles
+        speedups.append(sp)
+        common.row(f"fig13/{name}", ra.cycles,
+                   f"runahead_speedup={sp:.2f}x;entries={ra.runahead_entries}")
+    gm = common.geomean(speedups)
+    common.row("fig13/geomean", 0, f"{gm:.2f}x;max={max(speedups):.2f}x;"
+               f"paper=3.04x/6.91x", cycles=False)
+    return {"geomean": gm, "max": max(speedups)}

@@ -1,0 +1,31 @@
+"""Fig. 14: runahead speedup vs MSHR size (paper: saturates ~16)."""
+from __future__ import annotations
+
+import dataclasses
+
+from . import common
+from repro.core.cgra import presets
+
+KERNELS = common.PAPER_KERNELS[:4] if not common.QUICK else \
+    common.PAPER_KERNELS[:2]
+
+
+def run() -> dict:
+    sat = {}
+    for name in KERNELS:
+        base = common.sim(name, presets.CACHE_SPM)
+        prev = None
+        for mshr in (1, 2, 4, 8, 16, 32):
+            cfg = dataclasses.replace(presets.RUNAHEAD, mshr=mshr)
+            s = common.sim(name, cfg)
+            sp = base.cycles / s.cycles
+            common.row(f"fig14/{name}/mshr_{mshr}", s.cycles,
+                       f"runahead_speedup={sp:.2f}x;"
+                       f"prefetches={s.prefetch_issued}")
+            if prev is not None and sp < prev * 1.02 and name not in sat:
+                sat[name] = mshr
+            prev = sp
+    common.row("fig14/saturation_points", 0,
+               ";".join(f"{k}@{v}" for k, v in sat.items()) + ";paper=16",
+               cycles=False)
+    return sat

@@ -1,0 +1,45 @@
+"""Fig. 17: cache-reconfiguration gains, real vs random input data, with and
+without runahead (paper: +4.59%/+7.79% real no-RA; +3.22%/+6.02% real w/ RA;
++2.10%/+5.26% random no-RA; +1.58%/+2.73% random w/ RA)."""
+from __future__ import annotations
+
+import dataclasses
+
+from . import common
+from repro.core.cgra import presets
+from repro.core.cgra.reconfig import reconfigure
+from repro.core.cgra.trace import REAL_DATA_KERNELS
+
+KERNELS = common.PAPER_KERNELS if not common.QUICK else common.PAPER_KERNELS[:3]
+
+
+def run() -> dict:
+    gains: dict[str, list[float]] = {"real_nora": [], "real_ra": [],
+                                     "rand_nora": [], "rand_ra": []}
+    for name in KERNELS:
+        tr = common.trace(name)
+        base = presets.RECONFIG
+        res = reconfigure(tr, base, window=8192)
+        kind = "real" if name in REAL_DATA_KERNELS else "rand"
+        for ra in (False, True):
+            b = dataclasses.replace(base, runahead=ra)
+            n = dataclasses.replace(res.config, runahead=ra)
+            s_b = common.sim(name, b)
+            s_n = common.sim(name, n)
+            gain = (s_b.cycles - s_n.cycles) / s_b.cycles
+            gains[f"{kind}_{'ra' if ra else 'nora'}"].append(gain)
+            common.row(
+                f"fig17/{name}/{'runahead' if ra else 'no_runahead'}",
+                s_n.cycles,
+                f"gain={gain:+.2%};alloc={'/'.join(map(str, res.allocations))};"
+                f"lines={'/'.join(map(str, res.lines))}")
+    summary = {}
+    paper = {"real_nora": "4.59%", "real_ra": "3.22%",
+             "rand_nora": "2.10%", "rand_ra": "1.58%"}
+    for key, vals in gains.items():
+        if vals:
+            avg = sum(vals) / len(vals)
+            summary[key] = avg
+            common.row(f"fig17/avg_{key}", 0,
+                       f"{avg:+.2%};paper={paper[key]}", cycles=False)
+    return summary

@@ -1,0 +1,43 @@
+"""Benchmark driver: one module per paper table/figure + the roofline pass.
+
+Prints ``name,us_per_call,derived`` CSV.  For CGRA-simulator rows,
+``us_per_call`` is simulated kernel time at the 704 MHz HyCUBE clock; the
+roofline rows report modeled step time from the dry-run artifacts.  Set
+REPRO_BENCH_QUICK=1 for a fast subset.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+from . import (fig11_exec_time, fig12_cache_sweeps, fig13_runahead,
+               fig14_mshr, fig15_accuracy, fig16_coverage, fig17_reconfig,
+               kernels_bench, motivation, roofline)
+
+SUMMARY = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench_summary.json"
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    summary = {}
+    summary["motivation"] = motivation.run()
+    summary["fig11"] = fig11_exec_time.run()
+    summary["fig12"] = fig12_cache_sweeps.run()
+    summary["fig13"] = fig13_runahead.run()
+    summary["fig14"] = fig14_mshr.run()
+    summary["fig15"] = fig15_accuracy.run()
+    summary["fig16"] = fig16_coverage.run()
+    summary["fig17"] = fig17_reconfig.run()
+    kernels_bench.run()
+    rows = roofline.run()
+    summary["roofline_cells"] = len(rows)
+    SUMMARY.parent.mkdir(parents=True, exist_ok=True)
+    SUMMARY.write_text(json.dumps(summary, indent=2, default=float))
+    print(f"total_bench_seconds,{(time.time() - t0) * 1e6:.0f},"
+          f"wrote={SUMMARY}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

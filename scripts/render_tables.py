@@ -1,0 +1,88 @@
+"""Render the generated §Dry-run / §Roofline / §Perf-variants tables into
+EXPERIMENTS.md (everything below the '## §Generated tables' marker)."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks import roofline  # noqa: E402
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+ART = ROOT / "artifacts" / "dryrun"
+EXP = ROOT / "EXPERIMENTS.md"
+MARK = "## §Generated tables"
+
+
+def dryrun_table() -> str:
+    rows = ["| arch | shape | mesh | status | peak GiB/dev | compile s |",
+            "|---|---|---|---|---|---|"]
+    for p in sorted(ART.glob("*.json")):
+        if p.stem.count("__") != 2:
+            continue
+        r = json.loads(p.read_text())
+        if r["status"] == "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                        f"{r['peak_device_bytes']/2**30:.2f} | "
+                        f"{r['compile_seconds']} |")
+        else:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"{r['status']} | — | — |")
+    return "\n".join(rows)
+
+
+def variants_table() -> str:
+    out = ["| cell | variant | compute s | memory s | collective s | peak GiB |",
+           "|---|---|---|---|---|---|"]
+    for p in sorted(ART.glob("*__*__*__*.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        a = roofline.analyze_record(r)
+        base_p = ART / f"{r['arch']}__{r['shape']}__{r['mesh']}.json"
+        line = (f"| {r['arch']} x {r['shape']} | **{r['tag']}** | "
+                f"{a['compute_s']:.3f} | {a['memory_s']:.3f} | "
+                f"{a['collective_s']:.3f} | {a['peak_gib']:.2f} |")
+        out.append(line)
+        if base_p.exists():
+            b = roofline.analyze_record(json.loads(base_p.read_text()))
+            if b:
+                out.append(
+                    f"| {r['arch']} x {r['shape']} | baseline | "
+                    f"{b['compute_s']:.3f} | {b['memory_s']:.3f} | "
+                    f"{b['collective_s']:.3f} | {b['peak_gib']:.2f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = roofline.load_all("pod16x16")
+    rows_mp = roofline.load_all("pod2x16x16")
+    text = EXP.read_text()
+    head = text.split(MARK)[0]
+    gen = [
+        head + MARK,
+        "",
+        "### Roofline — single pod 16x16 (256 chips)",
+        "",
+        roofline.markdown_table(rows),
+        "",
+        "### Roofline — multi-pod 2x16x16 (512 chips)",
+        "",
+        roofline.markdown_table(rows_mp),
+        "",
+        "### §Perf variant measurements",
+        "",
+        variants_table(),
+        "",
+        "### Dry-run grid (compile status + per-device peak)",
+        "",
+        dryrun_table(),
+        "",
+    ]
+    EXP.write_text("\n".join(gen))
+    print(f"rendered {len(rows)}+{len(rows_mp)} roofline rows into {EXP}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""Faithful cycle-level reproduction of the paper's CGRA memory subsystem."""
+from .cache import Cache, CacheConfig, OracleCache
+from .simulator import SimConfig, Stats, plan_spm, simulate
+from .trace import (KERNELS, RANDOM_DATA_KERNELS, REAL_DATA_KERNELS, Array,
+                    Trace, gcn_aggregate, grad, perm_sort, radix_hist,
+                    radix_update, random_access, rgb, src2dest)
+from . import presets
+
+__all__ = [
+    "Cache", "CacheConfig", "OracleCache", "SimConfig", "Stats", "plan_spm",
+    "simulate", "KERNELS", "REAL_DATA_KERNELS", "RANDOM_DATA_KERNELS",
+    "Array", "Trace", "gcn_aggregate", "grad", "perm_sort", "radix_hist",
+    "radix_update", "random_access", "rgb", "src2dest", "presets",
+]

@@ -1,0 +1,118 @@
+"""Vectorized cache model: the paper's "Memory Subsystem Model" (§3.4).
+
+The reconfiguration software profiles per-L1 hit rates across *many* candidate
+configurations (ways x line sizes).  We implement that profiler as a JAX
+``lax.scan`` over the sampled access stream, ``vmap``-ed over the whole
+configuration grid — one compiled kernel evaluates every ``h_i(L_i, S_i)``
+point at once.  Streams are padded to 4 Ki buckets so the compiled scan is
+reused across kernels and caches.
+
+Semantics are pinned to :class:`repro.core.cgra.cache.OracleCache` by
+property tests (hypothesis): LRU, set-associative, allocate-on-miss.
+Addresses are int32 (kernel address spaces are a few MiB).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BUCKET = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigGrid:
+    """A batch of cache geometries, padded to common maxima."""
+
+    lines: np.ndarray      # [C] int32 line size (bytes)
+    sets: np.ndarray       # [C] int32 number of sets (way_bytes // line)
+    ways: np.ndarray       # [C] int32 associativity (0 = cache disabled)
+    max_sets: int
+    max_ways: int
+
+    @staticmethod
+    def build(way_bytes: int, ways_options, line_options) -> "ConfigGrid":
+        lines, sets, ways = [], [], []
+        for w in ways_options:
+            for ln in line_options:
+                lines.append(ln)
+                sets.append(max(1, way_bytes // ln))
+                ways.append(w)
+        return ConfigGrid(
+            lines=np.asarray(lines, np.int32),
+            sets=np.asarray(sets, np.int32),
+            ways=np.asarray(ways, np.int32),
+            max_sets=int(max(sets)),
+            max_ways=int(max(max(ways), 1)),
+        )
+
+    def __len__(self) -> int:
+        return len(self.lines)
+
+
+def _single_config_scan(addrs, valid, line, n_sets, n_ways, max_sets, max_ways):
+    """Hit/miss series for one configuration (to be vmap-ed)."""
+    way_ids = jnp.arange(max_ways, dtype=jnp.int32)
+    way_mask = way_ids < n_ways  # [W]
+
+    def step(state, inp):
+        tags, last_use, t = state
+        addr, ok = inp
+        line_addr = addr // line
+        s = (line_addr % n_sets).astype(jnp.int32)
+        tag = (line_addr // n_sets).astype(jnp.int32)
+        row_tags = tags[s]
+        row_use = last_use[s]
+        match = (row_tags == tag) & way_mask
+        hit = jnp.any(match) & (n_ways > 0)
+        hit_way = jnp.argmax(match).astype(jnp.int32)
+        victim = jnp.argmin(
+            jnp.where(way_mask, row_use, jnp.iinfo(jnp.int32).max)
+        ).astype(jnp.int32)
+        way = jnp.where(hit, hit_way, victim)
+        do = ok & (n_ways > 0)
+        tags = jnp.where(do, tags.at[s, way].set(tag), tags)
+        last_use = jnp.where(do, last_use.at[s, way].set(t), last_use)
+        return (tags, last_use, t + 1), hit & ok
+
+    init = (
+        jnp.full((max_sets, max_ways), -1, dtype=jnp.int32),
+        jnp.zeros((max_sets, max_ways), dtype=jnp.int32),
+        jnp.int32(1),
+    )
+    _, hits = jax.lax.scan(step, init, (addrs, valid))
+    return hits
+
+
+@functools.partial(jax.jit, static_argnames=("max_sets", "max_ways"))
+def _grid_hits(addrs, valid, lines, sets, ways, *, max_sets, max_ways):
+    return jax.vmap(
+        lambda ln, ns, nw: _single_config_scan(
+            addrs, valid, ln, ns, nw, max_sets, max_ways
+        )
+    )(lines, sets, ways)
+
+
+def hit_series(addrs: np.ndarray, grid: ConfigGrid) -> np.ndarray:
+    """[C, T] hit booleans for every configuration in the grid."""
+    t = int(len(addrs))
+    padded = -(-max(t, 1) // _BUCKET) * _BUCKET
+    a = np.zeros(padded, dtype=np.int32)
+    a[:t] = np.asarray(addrs, dtype=np.int64).astype(np.int32)
+    v = np.zeros(padded, dtype=bool)
+    v[:t] = True
+    hits = _grid_hits(
+        jnp.asarray(a), jnp.asarray(v),
+        jnp.asarray(grid.lines), jnp.asarray(grid.sets), jnp.asarray(grid.ways),
+        max_sets=grid.max_sets, max_ways=grid.max_ways,
+    )
+    return np.asarray(hits)[:, :t]
+
+
+def miss_counts(addrs: np.ndarray, grid: ConfigGrid) -> np.ndarray:
+    """[C] total misses per configuration."""
+    hits = hit_series(addrs, grid)
+    return (~hits).sum(axis=1)

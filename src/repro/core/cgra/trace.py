@@ -1,0 +1,386 @@
+"""Kernel -> memory-access trace generators for the CGRA simulator.
+
+The paper (Table 1) evaluates eight kernels whose defining property is the mix
+of *regular* (sequential / strided) and *irregular* (indirect ``a[b[i]]``)
+memory accesses.  We reproduce each kernel as a trace generator: a program-order
+list of memory accesses annotated with the dependence information the paper's
+dummy-bit hardware tracks (``addr_dep`` = index of the earlier *load* whose
+value forms this access's address; ``-1`` for regular accesses).
+
+A trace entry is (pe, addr, is_store, addr_dep, iter_id):
+  * ``pe``       memory-access PE issuing the request (border PEs, §2.1)
+  * ``addr``     byte address in a flat kernel address space
+  * ``is_store`` load vs store
+  * ``addr_dep`` trace index of the address-producing load (irregular access)
+  * ``iter_id``  loop iteration; the CGRA issues iteration *i*'s requests in
+                 the same II window (deterministic static schedule, §2.2)
+
+Datasets for the GCN ``aggregate`` kernel are synthetic graphs matched to the
+node/edge counts of Citeseer / Cora / PubMed / OGBN-Arxiv (the latter scaled
+1/10 to keep simulation time bounded, as the paper itself reduces feature
+dimensions "to control simulation time").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+ELEM = 4          # bytes per element (HyCUBE is a 32-bit datapath, §4.5)
+_ALIGN = 256      # array base alignment (max virtual-line size)
+
+
+@dataclasses.dataclass(frozen=True)
+class Array:
+    """A named data region in the kernel's flat address space."""
+
+    name: str
+    base: int
+    size: int  # bytes
+
+    @property
+    def end(self) -> int:
+        return self.base + self.size
+
+    def addr(self, index):
+        """Byte address(es) of ``self[index]`` (element granularity)."""
+        return self.base + np.asarray(index, dtype=np.int64) * ELEM
+
+
+@dataclasses.dataclass
+class Trace:
+    """Program-order memory-access trace of a mapped kernel."""
+
+    name: str
+    pe: np.ndarray        # int16  [N]
+    addr: np.ndarray      # int64  [N]
+    is_store: np.ndarray  # bool   [N]
+    addr_dep: np.ndarray  # int32  [N] (-1 = regular)
+    iter_id: np.ndarray   # int32  [N]
+    arrays: dict[str, Array]
+    ii: int               # initiation interval of the mapped DFG
+    n_iters: int
+
+    def __len__(self) -> int:
+        return int(self.addr.shape[0])
+
+    @property
+    def irregular_fraction(self) -> float:
+        """Fraction of accesses whose address depends on a loaded value."""
+        return float(np.mean(self.addr_dep >= 0))
+
+    def footprint(self) -> int:
+        return sum(a.size for a in self.arrays.values())
+
+
+class _TraceBuilder:
+    def __init__(self, name: str, ii: int):
+        self.name = name
+        self.ii = ii
+        self.pe: list[int] = []
+        self.addr: list[int] = []
+        self.is_store: list[int] = []
+        self.addr_dep: list[int] = []
+        self.iter_id: list[int] = []
+        self.arrays: dict[str, Array] = {}
+        self._cursor = 0
+        self._iter = 0
+
+    def array(self, name: str, n_elems: int) -> Array:
+        base = (self._cursor + _ALIGN - 1) // _ALIGN * _ALIGN
+        arr = Array(name, base, int(n_elems) * ELEM)
+        self._cursor = arr.end
+        self.arrays[name] = arr
+        return arr
+
+    def access(self, pe: int, addr: int, store: bool = False, dep: int = -1) -> int:
+        """Append one access; returns its trace index (for ``dep`` chaining)."""
+        idx = len(self.addr)
+        self.pe.append(pe)
+        self.addr.append(int(addr))
+        self.is_store.append(int(store))
+        self.addr_dep.append(int(dep))
+        self.iter_id.append(self._iter)
+        return idx
+
+    def load(self, pe: int, addr: int, dep: int = -1) -> int:
+        return self.access(pe, addr, store=False, dep=dep)
+
+    def store(self, pe: int, addr: int, dep: int = -1) -> int:
+        return self.access(pe, addr, store=True, dep=dep)
+
+    def next_iter(self) -> None:
+        self._iter += 1
+
+    def build(self) -> Trace:
+        return Trace(
+            name=self.name,
+            pe=np.asarray(self.pe, dtype=np.int16),
+            addr=np.asarray(self.addr, dtype=np.int64),
+            is_store=np.asarray(self.is_store, dtype=bool),
+            addr_dep=np.asarray(self.addr_dep, dtype=np.int32),
+            iter_id=np.asarray(self.iter_id, dtype=np.int32),
+            arrays=self.arrays,
+            ii=self.ii,
+            n_iters=self._iter,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Synthetic graphs (power-law degree, CSR edge order)
+# ---------------------------------------------------------------------------
+
+#: (nodes, edges) matched to the paper's datasets [34, 16].
+GCN_DATASETS: dict[str, tuple[int, int]] = {
+    "citeseer": (3_327, 9_104),
+    "cora": (2_708, 10_556),
+    "pubmed": (19_717, 88_648),
+    # OGBN-Arxiv is (169_343, 1_166_243); scaled 1/10 for simulation time.
+    "ogbn_arxiv": (16_934, 116_624),
+}
+
+
+def _powerlaw_graph(n_nodes: int, n_edges: int, rng: np.random.Generator,
+                    alpha: float = 1.5) -> tuple[np.ndarray, np.ndarray]:
+    """CSR-ordered edge list with Zipf-distributed destinations.
+
+    Sources are sorted (CSR iteration order -> ``edge_start`` is monotone, the
+    regular stream the paper highlights); destinations follow a power law
+    (graph hubs -> some cache reuse, most accesses irregular).
+    """
+    src = np.sort(rng.integers(0, n_nodes, size=n_edges))
+    ranks = rng.zipf(alpha, size=n_edges) % n_nodes
+    perm = rng.permutation(n_nodes)  # detach hub ids from low addresses
+    dst = perm[ranks]
+    return src.astype(np.int64), dst.astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Kernels (Table 1)
+# ---------------------------------------------------------------------------
+
+def gcn_aggregate(dataset: str = "cora", feat_dim: int = 2, n_pes: int = 4,
+                  seed: int = 0, max_edges: int | None = None) -> Trace:
+    """Listing 1: ``output[edge_start[i]] += weight[i] * feature[edge_end[i]]``.
+
+    Per edge: 3 regular loads (edge_start, edge_end, weight), ``feat_dim``
+    irregular feature loads, one irregular output load + store (RMW).
+    """
+    n_nodes, n_edges = GCN_DATASETS[dataset]
+    if max_edges is not None:
+        n_edges = min(n_edges, max_edges)
+    rng = np.random.default_rng(seed)
+    src, dst = _powerlaw_graph(n_nodes, n_edges, rng)
+
+    b = _TraceBuilder(f"gcn_{dataset}", ii=2)
+    e_start = b.array("edge_start", n_edges)
+    e_end = b.array("edge_end", n_edges)
+    weight = b.array("weight", n_edges)
+    feat = b.array("feature", n_nodes * feat_dim)
+    out = b.array("output", n_nodes * feat_dim)
+
+    for i in range(n_edges):
+        j_start = b.load(0, e_start.addr(i))
+        j_end = b.load(1, e_end.addr(i))
+        b.load(2, weight.addr(i))
+        for d in range(feat_dim):
+            b.load(1, feat.addr(dst[i] * feat_dim + d), dep=j_end)
+        # output RMW through the edge_start value (CSR order -> regular-ish
+        # addresses, but still an address dependence the dummy bits track)
+        b.load(3, out.addr(src[i] * feat_dim), dep=j_start)
+        b.store(3, out.addr(src[i] * feat_dim), dep=j_start)
+        b.next_iter()
+    return b.build()
+
+
+def grad(n_cells: int = 16_384, n_faces: int = 24_576, n_pes: int = 4,
+         seed: int = 1) -> Trace:
+    """OpenFOAM gradient: per mesh face, gather owner/neighbour cell values.
+
+    Owner indices are sorted (mesh faces enumerated per cell); neighbour
+    indices are random (unstructured mesh) -> highly irregular (§4.3 notes
+    ``grad`` is among the most random kernels).
+    """
+    rng = np.random.default_rng(seed)
+    owner = np.sort(rng.integers(0, n_cells, size=n_faces))
+    neigh = rng.integers(0, n_cells, size=n_faces)
+
+    b = _TraceBuilder("grad", ii=3)
+    own = b.array("owner", n_faces)
+    nei = b.array("neighbour", n_faces)
+    sf = b.array("sf", n_faces)
+    phi = b.array("phi", n_cells)
+    g = b.array("grad", n_cells)
+
+    for f in range(n_faces):
+        j_o = b.load(0, own.addr(f))
+        j_n = b.load(1, nei.addr(f))
+        b.load(2, sf.addr(f))
+        b.load(0, phi.addr(owner[f]), dep=j_o)
+        b.load(1, phi.addr(neigh[f]), dep=j_n)
+        b.load(3, g.addr(owner[f]), dep=j_o)
+        b.store(3, g.addr(owner[f]), dep=j_o)
+        b.load(3, g.addr(neigh[f]), dep=j_n)
+        b.store(3, g.addr(neigh[f]), dep=j_n)
+        b.next_iter()
+    return b.build()
+
+
+def perm_sort(n: int = 32_768, key_range: int = 8_192, seed: int = 2) -> Trace:
+    """Graclus counting sort [35]: histogram + permutation write."""
+    rng = np.random.default_rng(seed)
+    keys = rng.integers(0, key_range, size=n)
+    # running positions, as the scatter pass would see them
+    count = np.zeros(key_range, dtype=np.int64)
+
+    b = _TraceBuilder("perm_sort", ii=2)
+    key = b.array("key", n)
+    cnt = b.array("count", key_range)
+    out = b.array("out", n)
+
+    # pass 1: count[key[i]]++
+    for i in range(n):
+        j_k = b.load(0, key.addr(i))
+        b.load(1, cnt.addr(keys[i]), dep=j_k)
+        b.store(1, cnt.addr(keys[i]), dep=j_k)
+        b.next_iter()
+    # pass 2 (prefix sum): regular sweep
+    for k in range(key_range):
+        b.load(2, cnt.addr(k))
+        b.store(2, cnt.addr(k))
+        b.next_iter()
+    offsets = np.concatenate([[0], np.cumsum(np.bincount(keys, minlength=key_range))[:-1]])
+    count[:] = offsets
+    # pass 3: out[count[key[i]]++] = key[i]
+    for i in range(n):
+        j_k = b.load(0, key.addr(i))
+        j_c = b.load(1, cnt.addr(keys[i]), dep=j_k)
+        pos = count[keys[i]]
+        count[keys[i]] += 1
+        b.store(3, out.addr(pos), dep=j_c)
+        b.store(1, cnt.addr(keys[i]), dep=j_k)
+        b.next_iter()
+    return b.build()
+
+
+def radix_hist(n: int = 65_536, n_buckets: int = 2_048, shift: int = 8,
+               seed: int = 3) -> Trace:
+    """MachSuite radix sort (histogram): ``hist[(data[i] >> s) & mask]++``.
+
+    The shift/AND imparts locality (the paper notes this explicitly, §4.4):
+    the 256-entry histogram fits in a few cache lines.
+    """
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 1 << 30, size=n)
+    bucket = (data >> shift) & (n_buckets - 1)
+
+    b = _TraceBuilder("radix_hist", ii=2)
+    d = b.array("data", n)
+    h = b.array("hist", n_buckets)
+    for i in range(n):
+        j_d = b.load(0, d.addr(i))
+        b.load(1, h.addr(bucket[i]), dep=j_d)
+        b.store(1, h.addr(bucket[i]), dep=j_d)
+        b.next_iter()
+    return b.build()
+
+
+def radix_update(n: int = 49_152, n_buckets: int = 1_024, shift: int = 8,
+                 seed: int = 4) -> Trace:
+    """MachSuite radix sort (update): scatter to ``out[offset[bucket]++]``."""
+    rng = np.random.default_rng(seed)
+    data = rng.integers(0, 1 << 30, size=n)
+    bucket = ((data >> shift) & (n_buckets - 1)).astype(np.int64)
+    offs = np.concatenate([[0], np.cumsum(np.bincount(bucket, minlength=n_buckets))[:-1]])
+    pos = offs.copy()
+
+    b = _TraceBuilder("radix_update", ii=3)
+    d = b.array("data", n)
+    off = b.array("offset", n_buckets)
+    out = b.array("out", n)
+    for i in range(n):
+        j_d = b.load(0, d.addr(i))
+        j_o = b.load(1, off.addr(bucket[i]), dep=j_d)
+        b.store(2, out.addr(pos[bucket[i]]), dep=j_o)
+        pos[bucket[i]] += 1
+        b.store(1, off.addr(bucket[i]), dep=j_d)
+        b.next_iter()
+    return b.build()
+
+
+def rgb(n: int = 16_384, palette_size: int = 65_536, seed: int = 5) -> Trace:
+    """MiBench: paletted colour -> RGB.  Random lookups in a 64k palette
+    (among the most random kernels, §4.3)."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, palette_size, size=n)
+
+    b = _TraceBuilder("rgb", ii=2)
+    src = b.array("indexed", n)
+    pal = b.array("palette", palette_size)
+    out = b.array("rgb_out", n)
+    for i in range(n):
+        j_i = b.load(0, src.addr(i))
+        b.load(1, pal.addr(idx[i]), dep=j_i)
+        b.store(2, out.addr(i))
+        b.next_iter()
+    return b.build()
+
+
+def src2dest(n: int = 16_384, block: int = 64, seed: int = 6) -> Trace:
+    """Berkeley multimedia audio copy through an index map.
+
+    The map is a block permutation: runs of ``block`` sequential samples at
+    permuted origins -> a regular/irregular *mix* (Fig. 7g/h)."""
+    rng = np.random.default_rng(seed)
+    n_blocks = n // block
+    origins = rng.permutation(n_blocks) * block
+    mapping = (origins[:, None] + np.arange(block)[None, :]).reshape(-1)
+
+    b = _TraceBuilder("src2dest", ii=2)
+    mp = b.array("map", n)
+    src = b.array("src", n)
+    dst = b.array("dst", n)
+    for i in range(n):
+        j_m = b.load(0, mp.addr(i))
+        b.load(1, src.addr(mapping[i]), dep=j_m)
+        b.store(2, dst.addr(i))
+        b.next_iter()
+    return b.build()
+
+
+def random_access(n: int = 16_384, table_elems: int = 262_144,
+                  seed: int = 7) -> Trace:
+    """Pure-random gather over a 1 MiB table (reconfiguration control)."""
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, table_elems, size=n)
+    b = _TraceBuilder("random", ii=2)
+    ind = b.array("indices", n)
+    tab = b.array("table", table_elems)
+    for i in range(n):
+        j_i = b.load(0, ind.addr(i))
+        b.load(1, tab.addr(idx[i]), dep=j_i)
+        b.next_iter()
+    return b.build()
+
+
+#: kernel registry: name -> zero-arg constructor (paper defaults)
+KERNELS: dict[str, Callable[[], Trace]] = {
+    "gcn_citeseer": lambda: gcn_aggregate("citeseer"),
+    "gcn_cora": lambda: gcn_aggregate("cora"),
+    "gcn_pubmed": lambda: gcn_aggregate("pubmed", max_edges=30_000),
+    "gcn_ogbn_arxiv": lambda: gcn_aggregate("ogbn_arxiv", max_edges=30_000),
+    "grad": grad,
+    "perm_sort": perm_sort,
+    "radix_hist": radix_hist,
+    "radix_update": radix_update,
+    "rgb": rgb,
+    "src2dest": src2dest,
+    "random": random_access,
+}
+
+#: kernels driven by real-dataset-statistics inputs vs randomly generated
+#: inputs (the split used in §4.4 / Fig. 17).
+REAL_DATA_KERNELS = ("gcn_citeseer", "gcn_cora", "gcn_pubmed", "gcn_ogbn_arxiv")
+RANDOM_DATA_KERNELS = ("grad", "perm_sort", "radix_hist", "radix_update",
+                       "rgb", "src2dest")

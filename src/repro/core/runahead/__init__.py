@@ -1,0 +1,6 @@
+"""TPU-side adaptation of the paper's mechanisms (DESIGN.md §3):
+Algorithm-1 VMEM budgeting; the runahead *kernels* live in repro.kernels
+and the runahead *data pipeline* in repro.data.pipeline."""
+from .vmem_allocator import StreamPlan, VmemPlan, allocate
+
+__all__ = ["StreamPlan", "VmemPlan", "allocate"]

@@ -1,0 +1,66 @@
+"""Algorithm-1 as a VMEM-budget allocator for kernel operand streams.
+
+The paper's reconfiguration loop (§3.4) — sample per-PE access streams,
+model hit rates, DP-allocate cache ways, tune line sizes — maps onto TPU
+kernel tuning (DESIGN.md §3):
+
+  cache ways   -> VMEM tile units per operand stream
+  line size    -> DMA granularity (bytes per async copy)
+  hit rate     -> staged-row reuse fraction under that budget
+  Time HitRate -> all streams must hit per step (lock-step == MXU pipeline)
+
+``allocate`` profiles the traced index streams with the vectorized cache
+model and returns per-stream (tiles, dma_bytes) plus suggested
+runahead-gather parameters (buffer depth = the MSHR analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cgra.reconfig import algorithm1, profile_curves
+
+EPS = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamPlan:
+    name: str
+    tiles: int             # VMEM tile units granted
+    bytes: int             # tiles * tile_bytes
+    dma_bytes: int         # chosen fetch granularity ("line size")
+    hit_rate: float        # modeled reuse under this budget
+
+
+@dataclasses.dataclass(frozen=True)
+class VmemPlan:
+    streams: list[StreamPlan]
+    depth: int             # runahead window (in-flight DMA copies)
+    total_profit: float
+
+
+def allocate(streams: dict[str, np.ndarray], *, budget_tiles: int = 16,
+             tile_bytes: int = 32 * 1024,
+             dma_options=(256, 512, 1024, 2048),
+             row_bytes: dict[str, int] | None = None) -> VmemPlan:
+    """streams: name -> index array (row ids, in access order)."""
+    names = list(streams)
+    row_bytes = row_bytes or {}
+    profiled = []
+    for name in names:
+        idx = np.asarray(streams[name], dtype=np.int64)
+        stride = int(row_bytes.get(name, 256))
+        profiled.append((idx * stride, np.arange(idx.size)))
+    h = profile_curves(profiled, list(range(budget_tiles + 1)),
+                       list(dma_options), tile_bytes)
+    H = h.max(axis=2)
+    profit = np.log(np.maximum(H, EPS))
+    total, alloc = algorithm1(profit, budget_tiles)
+    plans = []
+    for i, name in enumerate(names):
+        line = int(dma_options[int(h[i, alloc[i]].argmax())])
+        plans.append(StreamPlan(name, alloc[i], alloc[i] * tile_bytes, line,
+                                float(H[i, alloc[i]])))
+    depth = max(2, min(16, max(a for a in alloc) or 2))
+    return VmemPlan(plans, depth, float(total))

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the flash attention kernel (MHA layout)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: int | None = None) -> jnp.ndarray:
+    """q,k,v: [B,H,S,D] (same head counts; GQA expanded by the wrapper)."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / np.sqrt(d)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

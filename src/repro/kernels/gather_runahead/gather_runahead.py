@@ -1,0 +1,181 @@
+"""Runahead row-gather Pallas TPU kernels.
+
+TPU adaptation of the paper's runahead mechanism (DESIGN.md §3): the index
+stream is known ahead of compute ("valid memory requests"), so future rows
+are prefetched HBM->VMEM while the current block computes.  Two variants:
+
+* :func:`runahead_gather` — *explicit* multi-buffered DMA: ``depth`` VMEM
+  slots hold in-flight row fetches (``depth`` = the MSHR-entry analogue,
+  §3.4.1/Fig. 14); the kernel issues ``make_async_copy`` for block ``i +
+  depth`` before computing block ``i``.  The table lives in ``pl.ANY``
+  (compiler-chosen, HBM at size) and only the gathered rows ever enter VMEM.
+* :func:`pipelined_gather` — the same access pattern expressed through the
+  grid pipeline: a scalar-prefetched index array drives the table BlockSpec
+  ``index_map``, and Pallas' pipeline emitter provides the double buffering.
+
+* :func:`gather_bag` — the full Listing-1 aggregation (padded-CSR GCN
+  ``aggregate`` / embedding-bag): per output row, ``K`` irregular row
+  fetches are combined with edge weights in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+# ---------------------------------------------------------------------------
+# explicit runahead (manual multi-buffered DMA)
+# ---------------------------------------------------------------------------
+
+def _runahead_kernel(idx_ref, table_ref, o_ref, scratch, sems, *,
+                     block_rows: int, depth: int, n_blocks: int):
+    i = pl.program_id(0)
+
+    def start_block(b, slot):
+        """Issue the ``block_rows`` row DMAs of index-block ``b``."""
+        for r in range(block_rows):
+            row = idx_ref[b * block_rows + r]
+            pltpu.make_async_copy(
+                table_ref.at[row], scratch.at[slot, r], sems.at[slot, r]
+            ).start()
+
+    # prologue: fill the runahead window (blocks 0..depth-1)
+    @pl.when(i == 0)
+    def _():
+        for k in range(depth):
+            if k < n_blocks:
+                start_block(k, k % depth)
+
+    slot = i % depth
+    for r in range(block_rows):
+        pltpu.make_async_copy(
+            table_ref.at[idx_ref[i * block_rows + r]],
+            scratch.at[slot, r], sems.at[slot, r],
+        ).wait()
+    o_ref[...] = scratch[slot]
+
+    # runahead: prefetch block i+depth now that slot is free
+    @pl.when(i + depth < n_blocks)
+    def _():
+        for r in range(block_rows):
+            row = idx_ref[(i + depth) * block_rows + r]
+            pltpu.make_async_copy(
+                table_ref.at[row], scratch.at[slot, r], sems.at[slot, r]
+            ).start()
+
+
+def runahead_gather(table: jax.Array, idx: jax.Array, *, block_rows: int = 8,
+                    depth: int = 2, interpret: bool = True) -> jax.Array:
+    n = idx.shape[0]
+    d = table.shape[1]
+    assert n % block_rows == 0, (n, block_rows)
+    n_blocks = n // block_rows
+    depth = min(depth, n_blocks)
+    kernel = functools.partial(_runahead_kernel, block_rows=block_rows,
+                               depth=depth, n_blocks=n_blocks)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((block_rows, d),
+                               lambda i, idx_ref: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((depth, block_rows, d), table.dtype),
+            pltpu.SemaphoreType.DMA((depth, block_rows)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)
+
+
+# ---------------------------------------------------------------------------
+# pipelined gather (BlockSpec-driven; pipeline emitter double-buffers)
+# ---------------------------------------------------------------------------
+
+def _pipelined_kernel(idx_ref, row_ref, o_ref):
+    del idx_ref
+    o_ref[...] = row_ref[...]
+
+
+def pipelined_gather(table: jax.Array, idx: jax.Array, *,
+                     interpret: bool = True) -> jax.Array:
+    n = idx.shape[0]
+    d = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, d), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, d), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _pipelined_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(idx, table)
+
+
+# ---------------------------------------------------------------------------
+# gather-bag (Listing 1: weighted aggregation of K irregular rows per output)
+# ---------------------------------------------------------------------------
+
+def _bag_kernel(idx_ref, w_ref, table_ref, o_ref, scratch, sems, *,
+                fanin: int, depth: int, n_rows: int):
+    s = pl.program_id(0)
+
+    def start_row(row_s, slot):
+        for k in range(fanin):
+            pltpu.make_async_copy(
+                table_ref.at[idx_ref[row_s, k]], scratch.at[slot, k],
+                sems.at[slot, k],
+            ).start()
+
+    @pl.when(s == 0)
+    def _():
+        for j in range(depth):
+            if j < n_rows:
+                start_row(j, j % depth)
+
+    slot = s % depth
+    for k in range(fanin):
+        pltpu.make_async_copy(
+            table_ref.at[idx_ref[s, k]], scratch.at[slot, k],
+            sems.at[slot, k],
+        ).wait()
+    w = w_ref[s, :].astype(jnp.float32)                    # [K]
+    acc = jnp.sum(scratch[slot].astype(jnp.float32) * w[:, None], axis=0)
+    o_ref[...] = acc[None].astype(o_ref.dtype)
+
+    @pl.when(s + depth < n_rows)
+    def _():
+        start_row(s + depth, slot)
+
+
+def gather_bag(table: jax.Array, idx: jax.Array, weights: jax.Array, *,
+               depth: int = 2, interpret: bool = True) -> jax.Array:
+    n, fanin = idx.shape
+    d = table.shape[1]
+    depth = min(depth, n)
+    kernel = functools.partial(_bag_kernel, fanin=fanin, depth=depth,
+                               n_rows=n)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # idx and weights
+        grid=(n,),
+        in_specs=[pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((1, d), lambda s, i_ref, w_ref: (s, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((depth, fanin, d), table.dtype),
+            pltpu.SemaphoreType.DMA((depth, fanin)),
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, d), table.dtype),
+        interpret=interpret,
+    )(idx, weights, table)

@@ -1,0 +1,25 @@
+"""Jit'd wrappers for MoE dispatch/combine kernels."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from . import moe_dispatch as k
+from . import ref
+
+
+@functools.partial(jax.jit, static_argnames=("n_slots", "impl", "interpret"))
+def dispatch(x, slot, *, n_slots: int, impl: str = "pallas",
+             interpret: bool = True):
+    if impl == "reference":
+        return ref.dispatch_ref(x, slot, n_slots)
+    return k.dispatch(x, slot, n_slots, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("depth", "impl", "interpret"))
+def combine(ye, slot, weights, *, depth: int = 2, impl: str = "pallas",
+            interpret: bool = True):
+    if impl == "reference":
+        return ref.combine_ref(ye, slot, weights)
+    return k.combine(ye, slot, weights, depth=depth, interpret=interpret)

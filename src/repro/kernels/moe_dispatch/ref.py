@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for MoE dispatch/combine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dispatch_ref(x: jnp.ndarray, slot: jnp.ndarray,
+                 n_slots: int) -> jnp.ndarray:
+    """Scatter tokens to expert-capacity slots.
+
+    x: [T, D]; slot: [T] flat destination in [0, n_slots) or -1 (dropped).
+    Returns [n_slots, D]; unfilled slots are zero."""
+    out = jnp.zeros((n_slots, x.shape[1]), x.dtype)
+    ok = slot >= 0
+    safe = jnp.where(ok, slot, 0)
+    return out.at[safe].add(jnp.where(ok[:, None], x, 0))
+
+
+def combine_ref(ye: jnp.ndarray, slot: jnp.ndarray,
+                weights: jnp.ndarray) -> jnp.ndarray:
+    """Gather expert outputs back to tokens.
+
+    ye: [n_slots, D]; slot: [T, K] (-1 = dropped); weights: [T, K].
+    Returns [T, D] = sum_k w[t,k] * ye[slot[t,k]]."""
+    ok = slot >= 0
+    safe = jnp.where(ok, slot, 0)
+    rows = jnp.take(ye, safe, axis=0)                      # [T, K, D]
+    w = jnp.where(ok, weights, 0.0).astype(jnp.float32)
+    return jnp.einsum("tk,tkd->td", w, rows.astype(jnp.float32)).astype(ye.dtype)

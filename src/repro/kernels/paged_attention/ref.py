@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_table, lengths):
+    """Single-token decode over paged KV.
+
+    q:          [B, H, D]
+    k_pages:    [n_pages, page_size, H, D] (physical page pool)
+    v_pages:    same
+    page_table: [B, pages_per_seq] physical page id per logical page
+    lengths:    [B] valid tokens per sequence
+
+    Returns [B, H, D].
+    """
+    b, h, d = q.shape
+    pages_per_seq = page_table.shape[1]
+    page = k_pages.shape[1]
+    # gather logical KV: [B, pages_per_seq, page, H, D] -> [B, S, H, D]
+    kg = jnp.take(k_pages, page_table, axis=0).reshape(b, -1, h, d)
+    vg = jnp.take(v_pages, page_table, axis=0).reshape(b, -1, h, d)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   kg.astype(jnp.float32)) / np.sqrt(d)
+    pos = jnp.arange(pages_per_seq * page)[None, :]
+    valid = pos < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(valid[:, None, :], p, 0.0)
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-20)
+    return jnp.einsum("bhs,bshd->bhd", p, vg.astype(jnp.float32)).astype(q.dtype)

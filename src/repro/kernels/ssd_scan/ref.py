@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the SSD chunked-scan kernel: naive per-token
+recurrence (same math as tests/test_layers.py::ssd_naive but in jnp)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xh, dt, a_log, b_mat, c_mat, d_skip):
+    """xh: [B,S,H,P]; dt: [B,S,H]; a_log,d_skip: [H]; b/c: [B,S,N].
+
+    Returns (y [B,S,H,P], final state [B,H,P,N])."""
+    bsz, s, h, p = xh.shape
+    n = b_mat.shape[-1]
+    a = -jnp.exp(a_log)
+
+    def step(state, t):
+        decay = jnp.exp(dt[:, t] * a)                     # [B,H]
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, t],
+                         xh[:, t].astype(jnp.float32),
+                         b_mat[:, t].astype(jnp.float32))
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state,
+                       c_mat[:, t].astype(jnp.float32))
+        y = y + d_skip[None, :, None] * xh[:, t].astype(jnp.float32)
+        return state, y
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, ys = jax.lax.scan(step, init, jnp.arange(s))
+    return ys.transpose(1, 0, 2, 3), final

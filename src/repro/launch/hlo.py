@@ -1,0 +1,260 @@
+"""Optimized-HLO introspection: collective traffic + op census.
+
+``cost_analysis`` does not report collective bytes, so we parse the compiled
+module text and sum the result-shape sizes of every collective op
+(all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute).
+Result bytes are the standard proxy for per-device link traffic (a ring
+all-gather moves (n-1)/n of the result per device; we report the raw sum and
+apply the ring factor in the roofline).
+"""
+from __future__ import annotations
+
+import collections
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:\w+\[[^\]]*\](?:\{[^}]*\})?))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of one 'dtype[d0,d1]' (or tuple '(a, b, ...)') shape string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind result bytes (summed over ops; -done ops skipped
+    so async pairs are not double counted)."""
+    out: dict[str, int] = collections.defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        if f"{m.group(2)}-done" in line:
+            continue
+        out[m.group(2)] += shape_bytes(m.group(1))
+    return dict(out)
+
+
+def op_census(hlo_text: str) -> dict[str, int]:
+    """Count of ops by mnemonic — used to spot remat duplication, transposes
+    between sharded ops, etc. (§Perf profiling on a dry-run artifact)."""
+    census: dict[str, int] = collections.defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z0-9-]+)\(", line)
+        if m:
+            census[m.group(1)] += 1
+    return dict(census)
+
+
+# ---------------------------------------------------------------------------
+# Loop-aware cost analysis
+# ---------------------------------------------------------------------------
+# XLA's HloCostAnalysis counts each while-loop body ONCE (verified on this
+# backend), but scan-over-layers / chunked-attention programs execute bodies
+# `known_trip_count` times.  We therefore walk the optimized module ourselves:
+# dot FLOPs and fusion-level bytes are multiplied through the loop nest (the
+# trip count is taken from the `known_trip_count` backend_config that JAX
+# scans produce).  Elementwise FLOPs are ignored (standard MFU convention);
+# bytes are a fusion-boundary proxy for HBM traffic.
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-_]+)\s*\(.*\)\s*->.*\{")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-_]+)\s*=\s*"
+    r"((?:\([^()]*\))|(?:[\w]+\[[^\]]*\](?:\{[^}]*\})?)|(?:[\w]+\[\]))\s*"
+    r"([\w\-]+)\((.*)$"
+)
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-_]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-_]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-_]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w\.\-_]+)")
+
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "conditional", "call", "after-all",
+               "add-dependency", "opt-barrier", "partition-id", "replica-id",
+               "iota", "custom-call"}
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def parse_modules(hlo_text: str):
+    """computation name -> list of (op_name, shape_str, opcode, rest)."""
+    comps: dict[str, list] = {}
+    entry = None
+    cur: list | None = None
+    for line in hlo_text.splitlines():
+        h = _COMP_HDR.match(line.strip()) if "{" in line else None
+        if h and "->" in line and not line.lstrip().startswith("%param"):
+            name = h.group(2)
+            cur = comps.setdefault(name, [])
+            if h.group(1):
+                entry = name
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if m:
+            cur.append((m.group(1), m.group(2), m.group(3), m.group(4)))
+    return comps, entry
+
+
+def analyze(hlo_text: str) -> dict:
+    """Loop-aware cost model for the compiled per-device module.
+
+    Returns ``flops`` (dot ops only, the MFU convention), ``collectives``
+    (per-kind bytes) and two HBM-traffic bounds:
+
+    * ``bytes_min`` — dot operand/result + collective + dynamic-(update-)
+      slice + copy traffic.  Elementwise chains are assumed perfectly fused
+      (as the TPU backend does); this is the optimistic bound used for the
+      roofline memory term.
+    * ``bytes_max`` — every op's operands+results at the CPU backend's
+      fusion granularity; a conservative upper bound (XLA:CPU wraps single
+      ops in 'fusions', so chains are counted at every link).
+    """
+    comps, entry = parse_modules(hlo_text)
+    zero = {"flops": 0.0, "bytes_min": 0.0, "bytes_max": 0.0, "collectives": {}}
+    if entry is None:
+        return zero
+    memo: dict[str, tuple] = {}
+
+    def shapes_of(comp_name: str) -> dict[str, str]:
+        return {op[0]: op[1] for op in comps.get(comp_name, [])}
+
+    def cost(comp_name: str):
+        if comp_name in memo:
+            return memo[comp_name]
+        memo[comp_name] = (0.0, 0.0, 0.0, {})  # cycle guard
+        flops = 0.0
+        bmin = 0.0
+        bmax = 0.0
+        coll: dict[str, float] = collections.defaultdict(float)
+        table = shapes_of(comp_name)
+        for name, shape_str, opcode, rest in comps.get(comp_name, []):
+            if opcode == "while":
+                body = _BODY_RE.search(rest)
+                trips = _TRIP_RE.search(rest)
+                n = int(trips.group(1)) if trips else 1
+                if body:
+                    f, b1, b2, c = cost(body.group(1))
+                    flops += n * f
+                    bmin += n * b1
+                    bmax += n * b2
+                    for k, v in c.items():
+                        coll[k] += n * v
+                continue
+            if opcode == "fusion":
+                called = _CALLS_RE.search(rest)
+                if called:
+                    f, b1, _, c = cost(called.group(1))
+                    flops += f
+                    bmin += b1           # dots/collectives inside the fusion
+                    for k, v in c.items():
+                        coll[k] += v
+                bmax += shape_bytes(shape_str)
+                for opn in _OPERAND_RE.findall(rest.split(", calls=")[0]):
+                    if opn in table:
+                        bmax += shape_bytes(table[opn])
+                continue
+            if opcode in ("call", "conditional"):
+                for called in _CALLS_RE.findall(rest):
+                    f, b1, b2, c = cost(called)
+                    flops += f
+                    bmin += b1
+                    bmax += b2
+                    for k, v in c.items():
+                        coll[k] += v
+                continue
+            if opcode == "dot":
+                dims = _shape_dims(shape_str)
+                cm = _CONTRACT_RE.search(rest)
+                contract = 1
+                ops = _OPERAND_RE.findall(rest)
+                if cm and ops and ops[0] in table:
+                    lhs_dims = _shape_dims(table[ops[0]])
+                    for ci in cm.group(1).split(","):
+                        if ci != "" and int(ci) < len(lhs_dims):
+                            contract *= lhs_dims[int(ci)]
+                out = 1
+                for d in dims:
+                    out *= d
+                flops += 2.0 * out * contract
+                traffic = shape_bytes(shape_str) + sum(
+                    shape_bytes(table[o]) for o in ops[:2] if o in table)
+                bmin += traffic
+                bmax += traffic
+                continue
+            base = opcode.replace("-start", "").replace("-done", "")
+            if base in COLLECTIVES:
+                if opcode.endswith("-done"):
+                    continue
+                sz = shape_bytes(shape_str)
+                coll[base] += sz
+                # XLA:CPU legalizes bf16 dots to f32, dragging adjacent
+                # collectives to f32; a native-bf16 TPU lowering moves half
+                # the bytes.  Track the f32 share for normalization.
+                if shape_str.startswith("f32") or "(f32" in shape_str:
+                    coll["f32_share"] = coll.get("f32_share", 0.0) + sz
+                bmin += sz
+                bmax += sz
+                continue
+            if opcode in _NO_TRAFFIC:
+                continue
+            if opcode == "dynamic-update-slice":
+                # traffic is the update operand (2nd arg), not the full
+                # buffer: in-place on TPU (a one-token KV write is one row)
+                ops = _OPERAND_RE.findall(rest)
+                upd = shape_bytes(table[ops[1]]) if len(ops) > 1 and \
+                    ops[1] in table else shape_bytes(shape_str)
+                bmin += 2 * upd
+                bmax += 2 * upd
+                continue
+            if opcode in ("dynamic-slice", "copy", "slice", "reshape",
+                          "transpose"):
+                sz = 2 * shape_bytes(shape_str)
+                bmin += sz
+                bmax += sz
+                continue
+            # generic elementwise op: upper bound only (assumed fused on TPU)
+            bmax += shape_bytes(shape_str)
+            for opn in _OPERAND_RE.findall(rest)[:3]:
+                if opn in table:
+                    bmax += shape_bytes(table[opn])
+        memo[comp_name] = (flops, bmin, bmax, dict(coll))
+        return memo[comp_name]
+
+    f, b1, b2, c = cost(entry)
+    return {"flops": f, "bytes_min": b1, "bytes_max": b2, "collectives": c}

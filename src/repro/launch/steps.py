@@ -1,0 +1,151 @@
+"""Train / serve step functions + their jit/sharding assembly.
+
+``build_train_step`` / ``build_serve_step`` return (jitted_fn, abstract
+inputs, shardings) so the same assembly serves the real launcher, the
+integration tests (host meshes) and the dry-run (512 placeholder devices).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shard_ctx
+from repro.models import api
+from repro.models.types import ModelConfig, ShapeConfig
+from repro.optim import adamw
+from repro.sharding.rules import MeshRules
+
+
+def make_optimizer(cfg: ModelConfig, lr: float = 3e-4) -> adamw.AdamWConfig:
+    return adamw.AdamWConfig(lr=lr, moment_dtype=cfg.adam_dtype)
+
+
+def train_step(state: dict, batch: dict, cfg: ModelConfig,
+               opt: adamw.AdamWConfig, transform=None):
+    """Loss + grads + AdamW update; returns (new_state, metrics).
+
+    ``cfg.accum_steps > 1`` runs gradient accumulation: the global batch is
+    split into microbatches scanned sequentially, shrinking every transient
+    activation proportionally (how the 100B+ train cells fit HBM)."""
+    accum = max(1, cfg.accum_steps)
+    if accum == 1:
+        loss, grads = jax.value_and_grad(
+            lambda p: api.train_loss(p, batch, cfg)
+        )(state["params"])
+    else:
+        micro = jax.tree.map(
+            lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+            batch)
+        params = state["params"]
+
+        def mb_step(acc, mb):
+            g_acc, l_acc = acc
+            # barrier: stops XLA hoisting the (loop-invariant) FSDP weight
+            # all-gathers out of the accumulation loop, which would leave
+            # every layer's full weights live simultaneously
+            l, g = jax.value_and_grad(
+                lambda p: api.train_loss(
+                    jax.lax.optimization_barrier(p), mb, cfg))(params)
+            g_acc = jax.tree.map(
+                lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, l_acc + l), None
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (grads, loss), _ = jax.lax.scan(mb_step, (zeros, jnp.float32(0.0)),
+                                        micro)
+        grads = jax.tree.map(lambda g: g / accum, grads)
+        loss = loss / accum
+    new_state = adamw.apply_updates(state, grads, cfg=opt, transform=transform)
+    metrics = {"loss": loss, "grad_norm": adamw.global_norm(grads)}
+    return new_state, metrics
+
+
+def serve_step(params, tokens, cache, cfg: ModelConfig):
+    logits, new_cache = api.decode(params, tokens, cache, cfg)
+    return logits, new_cache
+
+
+def prefill_step(params, batch, cfg: ModelConfig):
+    return api.prefill(params, batch, cfg)
+
+
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                   # jitted
+    args_abs: tuple           # abstract example args (ShapeDtypeStructs)
+    in_shardings: tuple
+    rules: MeshRules
+
+
+def abstract_state(cfg: ModelConfig, opt: adamw.AdamWConfig):
+    params_abs = api.abstract_params(cfg)
+    return jax.eval_shape(lambda: adamw.init_state(params_abs, opt))
+
+
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules,
+                     transform=None) -> BuiltStep:
+    opt = make_optimizer(cfg)
+    state_abs = abstract_state(cfg, opt)
+    batch_abs = api.input_specs(cfg, shape)
+    state_sh = rules.named(rules.state_specs(state_abs))
+    batch_sh = rules.named(rules.batch_specs(batch_abs))
+
+    def fn(state, batch):
+        with shard_ctx.constrainer(rules.constrain_fn()):
+            return train_step(state, batch, cfg, opt, transform)
+
+    # out_shardings pins the new state to the input specs so the state's
+    # sharding cannot drift across steps / checkpoint-restore cycles
+    metrics_sh = {"loss": None, "grad_norm": None}
+    jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, metrics_sh),
+                     donate_argnums=(0,))
+    return BuiltStep(jitted, (state_abs, batch_abs), (state_sh, batch_sh), rules)
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeConfig,
+                     rules: MeshRules) -> BuiltStep:
+    params_abs = api.abstract_params(cfg)
+    cache_abs = api.abstract_cache(cfg, shape)
+    tokens_abs = api.input_specs(cfg, shape)["tokens"]
+    params_sh = rules.named(rules.param_specs(params_abs))
+    cache_sh = rules.named(rules.cache_specs(cache_abs, shape.global_batch))
+    tokens_sh = rules.named(rules.batch_specs({"tokens": tokens_abs}))["tokens"]
+
+    def fn(params, tokens, cache):
+        with shard_ctx.constrainer(rules.constrain_fn()):
+            return serve_step(params, tokens, cache, cfg)
+
+    jitted = jax.jit(fn, in_shardings=(params_sh, tokens_sh, cache_sh),
+                     donate_argnums=(2,))
+    return BuiltStep(jitted, (params_abs, tokens_abs, cache_abs),
+                     (params_sh, tokens_sh, cache_sh), rules)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                       rules: MeshRules) -> BuiltStep:
+    params_abs = api.abstract_params(cfg)
+    batch_abs = api.input_specs(cfg, shape)
+    params_sh = rules.named(rules.param_specs(params_abs))
+    batch_sh = rules.named(rules.batch_specs(batch_abs))
+
+    def fn(params, batch):
+        with shard_ctx.constrainer(rules.constrain_fn()):
+            return prefill_step(params, batch, cfg)
+
+    jitted = jax.jit(fn, in_shardings=(params_sh, batch_sh))
+    return BuiltStep(jitted, (params_abs, batch_abs), (params_sh, batch_sh),
+                     rules)
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, rules)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, rules)
+    return build_serve_step(cfg, shape, rules)

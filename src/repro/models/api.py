@@ -1,0 +1,90 @@
+"""Uniform model API over the LM and encoder-decoder families.
+
+Everything the launcher / dry-run / examples need:
+
+  init_params(key, cfg)            -> params pytree
+  abstract_params(cfg)             -> ShapeDtypeStruct pytree (no allocation)
+  train_loss(params, batch, cfg)   -> scalar loss
+  prefill(params, batch, cfg)      -> last-position logits
+  init_cache(cfg, batch, seq_len)  -> decode-state pytree
+  decode(params, tokens, cache, cfg) -> (logits, new cache)
+  input_specs(cfg, shape)          -> {name: ShapeDtypeStruct} stand-ins
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .types import ModelConfig, ShapeConfig
+
+
+def init_params(key, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.init_encdec(key, cfg)
+    return lm.init_lm(key, cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.key(0), cfg))
+
+
+def train_loss(params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.family == "encdec":
+        return encdec.encdec_loss(params, batch, cfg)
+    return lm.lm_loss(params, batch, cfg, attn_impl=cfg.attn_impl)
+
+
+def prefill(params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    if cfg.family == "encdec":
+        return encdec.encdec_prefill(params, batch, cfg)
+    return lm.prefill_logits(params, batch, cfg, attn_impl=cfg.attn_impl)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    if cfg.family == "encdec":
+        return encdec.init_encdec_cache(cfg, batch, seq_len)
+    return lm.init_decode_cache(cfg, batch, seq_len)
+
+
+def decode(params, tokens, cache, cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.encdec_decode_step(params, tokens, cache, cfg)
+    return lm.decode_step(params, tokens, cache, cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    decode shapes describe ONE serving step: a single new token plus a KV /
+    state cache sized for ``shape.seq_len`` (the cache itself is built by
+    ``abstract_cache``)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.int32)
+    emb = lambda *sh: jax.ShapeDtypeStruct(sh, jnp.bfloat16)
+    if cfg.family == "encdec":
+        t = min(cfg.decoder_len, s)
+        if shape.kind == "train":
+            return {"frames": emb(b, s, cfg.d_model),
+                    "dec_tokens": tok(b, t), "labels": tok(b, t)}
+        if shape.kind == "prefill":
+            return {"frames": emb(b, s, cfg.d_model), "dec_tokens": tok(b, t)}
+        return {"tokens": tok(b, 1)}
+    if shape.kind == "decode":
+        return {"tokens": tok(b, 1)}
+    batch = {}
+    if cfg.input_mode == "embeddings":
+        batch["embeds"] = emb(b, s, cfg.d_model)
+        # decode still runs on generated text tokens via the embed table
+    else:
+        batch["tokens"] = tok(b, s)
+    if shape.kind == "train":
+        batch["labels"] = tok(b, s)
+    return batch
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    assert shape.kind == "decode"
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
+    )

@@ -1,0 +1,203 @@
+"""Encoder-decoder transformer (whisper-small backbone).
+
+The conv/audio frontend is a stub per the assignment: the encoder consumes
+precomputed frame embeddings [B, frames, d_model].  Sinusoidal absolute
+positions (whisper's learned decoder positions are immaterial here).
+Pre-LN blocks, GELU MLPs, LayerNorm.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import sharding
+from . import layers
+from .lm import chunked_cross_entropy
+from .types import ModelConfig
+
+Params = dict[str, Any]
+
+
+def sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freq = np.exp(-np.log(10_000.0) * np.arange(half) / max(1, half - 1))
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> Params:
+    ks = layers.split(key, 2)
+    return {
+        "attn_norm": layers.init_norm(cfg),
+        "attn": layers.init_attention(ks[0], cfg),
+        "mlp_norm": layers.init_norm(cfg),
+        "mlp": layers.init_mlp(ks[1], cfg, gated=False),
+    }
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> Params:
+    ks = layers.split(key, 3)
+    return {
+        "self_norm": layers.init_norm(cfg),
+        "self_attn": layers.init_attention(ks[0], cfg),
+        "cross_norm": layers.init_norm(cfg),
+        "cross_attn": layers.init_attention(ks[1], cfg),
+        "mlp_norm": layers.init_norm(cfg),
+        "mlp": layers.init_mlp(ks[2], cfg, gated=False),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig) -> Params:
+    ks = layers.split(key, 4)
+    enc_keys = layers.split(ks[0], cfg.n_encoder_layers)
+    dec_keys = layers.split(ks[1], cfg.n_decoder_layers)
+    return {
+        "embed": layers.dense_init(ks[2], (cfg.vocab_size, cfg.d_model),
+                                   jnp.dtype(cfg.dtype)),
+        "encoder": jax.vmap(lambda k: _init_enc_block(k, cfg))(enc_keys),
+        "enc_norm": layers.init_norm(cfg),
+        "decoder": jax.vmap(lambda k: _init_dec_block(k, cfg))(dec_keys),
+        "dec_norm": layers.init_norm(cfg),
+        "lm_head": layers.dense_init(ks[3], (cfg.d_model, cfg.vocab_size),
+                                     jnp.dtype(cfg.dtype)),
+    }
+
+
+def encode(params: Params, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    s = frames.shape[1]
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + sinusoid(jnp.arange(s), cfg.d_model).astype(x.dtype)
+    x = sharding.constrain(x, "activations")
+    positions = jnp.arange(s)
+
+    @jax.checkpoint
+    def body(x, p):
+        h = layers.apply_norm(p["attn_norm"], x, cfg)
+        h = layers.apply_attention(p["attn"], h, positions, cfg, causal=False)
+        x = sharding.constrain(x + h, "activations")
+        h = layers.apply_norm(p["mlp_norm"], x, cfg)
+        x = sharding.constrain(x + layers.apply_mlp(p["mlp"], h), "activations")
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layers.apply_norm(params["enc_norm"], x, cfg)
+
+
+def _decode_stack(params: Params, x: jax.Array, enc_out: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    positions = jnp.arange(x.shape[1])
+
+    @jax.checkpoint
+    def body(x, p):
+        h = layers.apply_norm(p["self_norm"], x, cfg)
+        h = layers.apply_attention(p["self_attn"], h, positions, cfg,
+                                   causal=True)
+        x = x + h
+        h = layers.apply_norm(p["cross_norm"], x, cfg)
+        x = x + layers.apply_cross_attention(p["cross_attn"], h, enc_out, cfg)
+        h = layers.apply_norm(p["mlp_norm"], x, cfg)
+        x = x + layers.apply_mlp(p["mlp"], h)
+        return sharding.constrain(x, "activations"), None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return layers.apply_norm(params["dec_norm"], x, cfg)
+
+
+def encdec_loss(params: Params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    enc_out = encode(params, batch["frames"], cfg)
+    t = batch["dec_tokens"].shape[1]
+    x = jnp.take(params["embed"], batch["dec_tokens"], axis=0)
+    x = x + sinusoid(jnp.arange(t), cfg.d_model).astype(x.dtype)
+    x = _decode_stack(params, x, enc_out, cfg)
+    chunk = t
+    for c in (256, 224, 128, 64, 32, 16, 8, 4, 2, 1):
+        if t % c == 0:
+            chunk = c
+            break
+    return chunked_cross_entropy(x, params["lm_head"], batch["labels"],
+                                 chunk=chunk)
+
+
+def encdec_prefill(params: Params, batch: dict, cfg: ModelConfig) -> jax.Array:
+    """Encode a (possibly 32k-frame) input and run the decoder prompt; the
+    returned logits are for the last decoder position."""
+    enc_out = encode(params, batch["frames"], cfg)
+    t = batch["dec_tokens"].shape[1]
+    x = jnp.take(params["embed"], batch["dec_tokens"], axis=0)
+    x = x + sinusoid(jnp.arange(t), cfg.d_model).astype(x.dtype)
+    x = _decode_stack(params, x, enc_out, cfg)
+    return (x[:, -1, :] @ params["lm_head"]).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    dims = layers.attn_dims(cfg)
+    g = cfg.n_decoder_layers
+    return {
+        "pos": jnp.int32(0),
+        "self_k": jnp.zeros((g, batch, dims.n_kv, seq_len, dims.d_head), dt),
+        "self_v": jnp.zeros((g, batch, dims.n_kv, seq_len, dims.d_head), dt),
+        # cross K/V precomputed from the encoder output at prefill time
+        "cross_k": jnp.zeros((g, batch, dims.n_kv, cfg.cross_len, dims.d_head), dt),
+        "cross_v": jnp.zeros((g, batch, dims.n_kv, cfg.cross_len, dims.d_head), dt),
+    }
+
+
+def precompute_cross(params: Params, enc_out: jax.Array, cfg: ModelConfig):
+    """[G,B,H,S,D] cross-attention K/V from encoder output."""
+    dims = layers.attn_dims(cfg)
+
+    def per_layer(p):
+        k = enc_out @ p["cross_attn"]["wk"]
+        v = enc_out @ p["cross_attn"]["wv"]
+        b, s = enc_out.shape[:2]
+        k = k.reshape(b, s, dims.n_kv, dims.d_head).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, dims.n_kv, dims.d_head).transpose(0, 2, 1, 3)
+        return k, v
+
+    return jax.vmap(per_layer)(params["decoder"])
+
+
+def encdec_decode_step(params: Params, tokens: jax.Array, cache: dict,
+                       cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = x + sinusoid(pos[None], cfg.d_model).astype(x.dtype)[None]
+    dims = layers.attn_dims(cfg)
+    s_c = cache["self_k"].shape[3]
+
+    def body(x, inp):
+        p, kc, vc, ck, cv = inp
+        h = layers.apply_norm(p["self_norm"], x, cfg)
+        q, k, v = layers._project_qkv(p["self_attn"], h, h, dims)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, pos, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, pos, 0))
+        y = layers.decode_attention(q, kc, vc, jnp.arange(s_c), pos=pos)
+        x = x + layers._merge_heads(p["self_attn"], y)
+        h = layers.apply_norm(p["cross_norm"], x, cfg)
+        q = h @ p["cross_attn"]["wq"]
+        b = h.shape[0]
+        q = q.reshape(b, 1, dims.n_q, dims.d_head).transpose(0, 2, 1, 3)
+        y = layers.decode_attention(q, ck, cv, jnp.arange(ck.shape[2]),
+                                    pos=ck.shape[2])
+        x = x + layers._merge_heads(p["cross_attn"], y)
+        h = layers.apply_norm(p["mlp_norm"], x, cfg)
+        x = x + layers.apply_mlp(p["mlp"], h)
+        return x, (kc, vc)
+
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x,
+        (params["decoder"], cache["self_k"], cache["self_v"],
+         cache["cross_k"], cache["cross_v"]),
+    )
+    x = layers.apply_norm(params["dec_norm"], x, cfg)
+    logits = (x[:, 0, :] @ params["lm_head"]).astype(jnp.float32)
+    new_cache = dict(cache, pos=pos + 1, self_k=new_k, self_v=new_v)
+    return logits, new_cache

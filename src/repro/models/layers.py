@@ -1,0 +1,516 @@
+"""Core layer library: norms, RoPE, MLPs and GQA attention.
+
+Everything is a pure function over parameter pytrees (nested dicts of
+``jnp.ndarray``) so the whole stack composes with ``jax.lax.scan``,
+``jax.remat``, pjit sharding constraints and ``jax.eval_shape``-based
+dry-runs.  ``init_*`` functions build parameters; ``apply_*`` run them.
+
+Attention comes in three interchangeable implementations (all numerically
+aligned; see tests/test_layers.py):
+
+* ``reference`` — plain softmax attention, O(S^2) memory (oracle),
+* ``blocked``   — FlashAttention-style streaming softmax over KV chunks via
+  ``lax.scan`` (O(S * chunk) memory; the dry-run default for long sequences;
+  pure jnp so it lowers for any backend),
+* the Pallas TPU kernel in :mod:`repro.kernels.flash_attention` (selected via
+  ``impl="pallas"`` on real TPU runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import sharding
+from .types import ModelConfig
+
+Params = dict[str, Any]
+
+DEFAULT_SCALE = 0.02
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: float = DEFAULT_SCALE):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def split(key, n):
+    return jax.random.split(key, n)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, dim: int | None = None) -> Params:
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype=jnp.float32)}
+    if cfg.norm_kind == "layer":
+        p["bias"] = jnp.zeros((d,), dtype=jnp.float32)
+    return p
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layer":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, D] with D even; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))          # [D/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, gated: bool = True) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d, f = cfg.d_model, cfg.d_ff
+    ks = split(key, 3)
+    if gated:
+        return {
+            "wi_gate": dense_init(ks[0], (d, f), dt),
+            "wi_up": dense_init(ks[1], (d, f), dt),
+            "wo": dense_init(ks[2], (f, d), dt),
+        }
+    return {
+        "wi": dense_init(ks[0], (d, f), dt),
+        "wo": dense_init(ks[1], (f, d), dt),
+    }
+
+
+def apply_mlp(p: Params, x: jax.Array) -> jax.Array:
+    if "wi_gate" in p:
+        h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_q: int
+    n_kv: int
+    d_head: int
+
+    @property
+    def rep(self) -> int:
+        return self.n_q // self.n_kv
+
+
+def attn_dims(cfg: ModelConfig) -> AttnDims:
+    return AttnDims(cfg.n_heads, cfg.n_kv_heads or cfg.n_heads, cfg.head_dim)
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    dims = attn_dims(cfg)
+    d = cfg.d_model
+    ks = split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, dims.n_q * dims.d_head), dt),
+        "wk": dense_init(ks[1], (d, dims.n_kv * dims.d_head), dt),
+        "wv": dense_init(ks[2], (d, dims.n_kv * dims.d_head), dt),
+        "wo": dense_init(ks[3], (dims.n_q * dims.d_head, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((dims.n_q * dims.d_head,), dt)
+        p["bk"] = jnp.zeros((dims.n_kv * dims.d_head,), dt)
+        p["bv"] = jnp.zeros((dims.n_kv * dims.d_head,), dt)
+    return p
+
+
+def _project_qkv(p: Params, xq: jax.Array, xkv: jax.Array, dims: AttnDims):
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    b = xq.shape[0]
+    q = q.reshape(b, xq.shape[1], dims.n_q, dims.d_head).transpose(0, 2, 1, 3)
+    k = k.reshape(b, xkv.shape[1], dims.n_kv, dims.d_head).transpose(0, 2, 1, 3)
+    v = v.reshape(b, xkv.shape[1], dims.n_kv, dims.d_head).transpose(0, 2, 1, 3)
+    return q, k, v
+
+
+def _merge_heads(p: Params, y: jax.Array) -> jax.Array:
+    b, h, s, d = y.shape
+    return y.transpose(0, 2, 1, 3).reshape(b, s, h * d) @ p["wo"]
+
+
+def reference_attention(q, k, v, *, causal: bool, window: int | None = None,
+                        q_positions=None, k_positions=None) -> jax.Array:
+    """Oracle softmax attention.  q: [B,Hq,Sq,D]; k,v: [B,Hkv,Sk,D]."""
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    qg = q.reshape(b, hkv, rep, sq, d)
+    scores = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    if q_positions is None:
+        q_positions = jnp.arange(sq)
+    if k_positions is None:
+        k_positions = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), dtype=bool)
+    if causal:
+        mask &= q_positions[:, None] >= k_positions[None, :]
+    if window is not None:
+        mask &= q_positions[:, None] - k_positions[None, :] < window
+    mask &= k_positions[None, :] >= 0          # ring-buffer empty slots
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully masked rows
+    y = jnp.einsum("bgrqk,bgkd->bgrqd", probs.astype(v.dtype), v)
+    return y.reshape(b, hq, sq, d)
+
+
+def _chunk_mask(q_pos, k_pos, causal: bool, window):
+    mask = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    return mask
+
+
+def _triangular_fwd_impl(q, k, v, q_chunk):
+    """Causal flash forward with *triangular scheduling*: q-chunk ``w`` is
+    paired with q-chunk ``nq-1-w``, so every scan step processes exactly
+    ``nq+1`` kv chunks — the upper-triangle (fully masked) chunk pairs of
+    the naive schedule are never visited, halving attention FLOPs.
+
+    Requires causal, no window, q_chunk == k_chunk.  Returns (y, lse).
+    """
+    b, h, sq, d = q.shape
+    nq = sq // q_chunk
+    scale = 1.0 / np.sqrt(d)
+    n_workers = (nq + 1) // 2
+    steps = nq + 1                      # (w+1) + (nq-w) kv visits per worker
+
+    def worker(carry, w):
+        y_out, lse_out = carry
+        lo, hi = w, nq - 1 - w
+        has_hi = hi > w
+        q_lo = jax.lax.dynamic_slice_in_dim(q, lo * q_chunk, q_chunk, axis=2)
+        q_hi = jax.lax.dynamic_slice_in_dim(q, hi * q_chunk, q_chunk, axis=2)
+
+        @jax.checkpoint
+        def kv_step(inner, t):
+            m_lo, l_lo, a_lo, m_hi, l_hi, a_hi = inner
+            is_lo = t <= w
+            qi = jnp.where(is_lo, lo, hi)
+            kj = jnp.where(is_lo, t, t - w - 1)
+            active = is_lo | has_hi
+            q_i = jnp.where(is_lo, q_lo, q_hi)
+            k_j = jax.lax.dynamic_slice_in_dim(k, kj * q_chunk, q_chunk, axis=2)
+            v_j = jax.lax.dynamic_slice_in_dim(v, kj * q_chunk, q_chunk, axis=2)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            q_pos = qi * q_chunk + jnp.arange(q_chunk)
+            k_pos = kj * q_chunk + jnp.arange(q_chunk)
+            mask = (q_pos[:, None] >= k_pos[None, :]) & active
+            s = jnp.where(mask, s, -jnp.inf)
+            m = jnp.where(is_lo, m_lo, m_hi)
+            l = jnp.where(is_lo, l_lo, l_hi)
+            acc = jnp.where(is_lo, a_lo, a_hi)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(mask, jnp.exp(s - m_safe[..., None]), 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_j.dtype), v_j
+            ).astype(jnp.float32)
+            upd = lambda old, new: jnp.where(is_lo & active, new, old)
+            updh = lambda old, new: jnp.where((~is_lo) & active, new, old)
+            return (upd(m_lo, m_new), upd(l_lo, l_new), upd(a_lo, acc_new),
+                    updh(m_hi, m_new), updh(l_hi, l_new),
+                    updh(a_hi, acc_new)), None
+
+        z1 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
+        z2 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        z3 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        (m_lo, l_lo, a_lo, m_hi, l_hi, a_hi), _ = jax.lax.scan(
+            kv_step, (z1, z2, z3, z1, z2, z3), jnp.arange(steps))
+
+        def finalize(y_out, lse_out, m, l, acc, qi):
+            y_i = (acc / jnp.maximum(l, 1e-20)[..., None]).astype(q.dtype)
+            lse_i = jnp.where(jnp.isfinite(m), m, 0.0) + jnp.log(
+                jnp.maximum(l, 1e-20))
+            y_out = jax.lax.dynamic_update_slice_in_dim(
+                y_out, y_i, qi * q_chunk, axis=2)
+            lse_out = jax.lax.dynamic_update_slice_in_dim(
+                lse_out, lse_i, qi * q_chunk, axis=2)
+            return y_out, lse_out
+
+        y_out, lse_out = finalize(y_out, lse_out, m_lo, l_lo, a_lo, lo)
+        y2, lse2 = finalize(y_out, lse_out, m_hi, l_hi, a_hi, hi)
+        y_out = jnp.where(has_hi, y2, y_out)
+        lse_out = jnp.where(has_hi, lse2, lse_out)
+        return (y_out, lse_out), None
+
+    y0 = jnp.zeros_like(q)
+    lse0 = jnp.zeros((b, h, sq), jnp.float32)
+    (y, lse), _ = jax.lax.scan(worker, (y0, lse0), jnp.arange(n_workers))
+    return y, lse
+
+
+def _blocked_fwd_impl(q, k, v, causal, window, q_chunk, k_chunk, q_offset,
+                      triangular=False):
+    """Streaming-softmax forward; returns (y, lse).
+
+    q, k, v: [B, H, S, D] (MHA layout; GQA KV is expanded by the caller).
+    Chunks are cut with dynamic_slice along S and results written back with
+    dynamic_update_slice — the arrays keep one layout/sharding throughout,
+    so no resharding collectives appear inside the loops.
+    """
+    b, h, sq, d = q.shape
+    if (triangular and causal and window is None and q_chunk == k_chunk
+            and sq == k.shape[2] and q_offset == 0 and sq // q_chunk > 1):
+        return _triangular_fwd_impl(q, k, v, q_chunk)
+    sk = k.shape[2]
+    nq, nk = sq // q_chunk, sk // k_chunk
+    scale = 1.0 / np.sqrt(d)
+
+    def q_step(carry, qi):
+        y_out, lse_out = carry
+        q_i = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=2)
+        q_pos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        @jax.checkpoint
+        def kv_step(inner, kj):
+            m, l, acc = inner
+            k_j = jax.lax.dynamic_slice_in_dim(k, kj * k_chunk, k_chunk, axis=2)
+            v_j = jax.lax.dynamic_slice_in_dim(v, kj * k_chunk, k_chunk, axis=2)
+            k_pos = kj * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _chunk_mask(q_pos, k_pos, causal, window)
+            s = jnp.where(mask, s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask, p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p.astype(v_j.dtype), v_j
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        y_i = (acc / jnp.maximum(l, 1e-20)[..., None]).astype(q.dtype)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        lse_i = m_safe + jnp.log(jnp.maximum(l, 1e-20))
+        y_out = jax.lax.dynamic_update_slice_in_dim(
+            y_out, y_i, qi * q_chunk, axis=2)
+        lse_out = jax.lax.dynamic_update_slice_in_dim(
+            lse_out, lse_i, qi * q_chunk, axis=2)
+        return (y_out, lse_out), None
+
+    y0 = jnp.zeros_like(q)
+    lse0 = jnp.zeros((b, h, sq), jnp.float32)
+    (y, lse), _ = jax.lax.scan(q_step, (y0, lse0), jnp.arange(nq))
+    return y, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _blocked_grouped(q, k, v, causal, window, q_chunk, k_chunk, q_offset,
+                     triangular=False):
+    y, _ = _blocked_fwd_impl(q, k, v, causal, window, q_chunk, k_chunk,
+                             q_offset, triangular)
+    return y
+
+
+def _blocked_vjp_fwd(q, k, v, causal, window, q_chunk, k_chunk, q_offset,
+                     triangular=False):
+    y, lse = _blocked_fwd_impl(q, k, v, causal, window, q_chunk, k_chunk,
+                               q_offset, triangular)
+    return y, (q, k, v, y, lse)
+
+
+def _blocked_vjp_bwd(causal, window, q_chunk, k_chunk, q_offset, triangular,
+                     res, dy):
+    """FlashAttention-style backward: scores are *recomputed* per chunk pair,
+    so the O(S^2) probability matrices are never stored (the pure-jnp autodiff
+    would stack them across both scans — see EXPERIMENTS.md §Perf).  Same
+    slice-in-place layout discipline as the forward."""
+    q, k, v, y, lse = res
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    nq, nk = sq // q_chunk, sk // k_chunk
+    scale = 1.0 / np.sqrt(d)
+    delta = jnp.sum(dy.astype(jnp.float32) * y.astype(jnp.float32), axis=-1)
+
+    def q_step(carry, qi):
+        dq, dk, dv = carry
+        off = qi * q_chunk
+        q_i = jax.lax.dynamic_slice_in_dim(q, off, q_chunk, axis=2)
+        dy_i = jax.lax.dynamic_slice_in_dim(dy, off, q_chunk, axis=2)
+        lse_i = jax.lax.dynamic_slice_in_dim(lse, off, q_chunk, axis=2)
+        delta_i = jax.lax.dynamic_slice_in_dim(delta, off, q_chunk, axis=2)
+        q_pos = q_offset + off + jnp.arange(q_chunk)
+
+        @jax.checkpoint
+        def kv_step(inner, kj):
+            dk, dv, dq_i = inner
+            k_j = jax.lax.dynamic_slice_in_dim(k, kj * k_chunk, k_chunk, axis=2)
+            v_j = jax.lax.dynamic_slice_in_dim(v, kj * k_chunk, k_chunk, axis=2)
+            k_pos = kj * k_chunk + jnp.arange(k_chunk)
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _chunk_mask(q_pos, k_pos, causal, window)
+            p = jnp.where(mask, jnp.exp(s - lse_i[..., None]), 0.0)
+            dp = jnp.einsum("bhqd,bhkd->bhqk", dy_i.astype(jnp.float32),
+                            v_j.astype(jnp.float32))
+            ds = p * (dp - delta_i[..., None]) * scale
+            dq_i = dq_i + jnp.einsum("bhqk,bhkd->bhqd", ds,
+                                     k_j.astype(jnp.float32))
+            dk_j = jnp.einsum("bhqk,bhqd->bhkd", ds, q_i.astype(jnp.float32))
+            dv_j = jnp.einsum("bhqk,bhqd->bhkd", p, dy_i.astype(jnp.float32))
+            upd = lambda acc, add: jax.lax.dynamic_update_slice_in_dim(
+                acc, jax.lax.dynamic_slice_in_dim(
+                    acc, kj * k_chunk, k_chunk, axis=2) + add,
+                kj * k_chunk, axis=2)
+            return (upd(dk, dk_j), upd(dv, dv_j), dq_i), None
+
+        dq0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        (dk, dv, dq_i), _ = jax.lax.scan(kv_step, (dk, dv, dq0),
+                                         jnp.arange(nk))
+        dq = jax.lax.dynamic_update_slice_in_dim(
+            dq, dq_i, off, axis=2)
+        return (dq, dk, dv), None
+
+    dq0 = jnp.zeros((b, h, sq, d), jnp.float32)
+    dk0 = jnp.zeros((b, h, sk, d), jnp.float32)
+    dv0 = jnp.zeros((b, h, sk, d), jnp.float32)
+    (dq, dk, dv), _ = jax.lax.scan(q_step, (dq0, dk0, dv0), jnp.arange(nq))
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_blocked_grouped.defvjp(_blocked_vjp_fwd, _blocked_vjp_bwd)
+
+
+def blocked_attention(q, k, v, *, causal: bool, window: int | None = None,
+                      q_chunk: int = 512, k_chunk: int = 1024,
+                      q_offset: int = 0, triangular: bool = False) -> jax.Array:
+    """FlashAttention-style attention in pure jnp with a flash *backward*
+    (custom VJP, scores recomputed — never materialized or stored).
+
+    Memory is O(q_chunk * k_chunk) per (batch, head) in both passes, which is
+    what lets the 32k prefill and 4k train cells fit.  Causality is enforced
+    by masking (all chunk pairs visited; §Perf measures the triangular-
+    scheduling optimization that removes the upper-triangle waste).
+
+    GQA KV (fewer KV than Q heads) is expanded to full query heads *outside*
+    the custom VJP, so autodiff folds the head-repeat into a sum and the
+    whole kernel runs in one [B,H,S,D] layout (clean head sharding).
+    """
+    b, hq, sq, d = q.shape
+    hkv, sk = k.shape[1], k.shape[2]
+    assert sq % q_chunk == 0 and sk % k_chunk == 0, (sq, q_chunk, sk, k_chunk)
+    if hkv != hq:
+        k = sharding.constrain(k, "attn_kv_rep")   # replicated over model
+        v = sharding.constrain(v, "attn_kv_rep")
+        k = jnp.repeat(k, hq // hkv, axis=1)       # shard-local expansion
+        v = jnp.repeat(v, hq // hkv, axis=1)
+    q = sharding.constrain(q, "attn_heads")
+    k = sharding.constrain(k, "attn_heads")
+    v = sharding.constrain(v, "attn_heads")
+    if triangular:
+        k_chunk = q_chunk
+    with jax.named_scope("flash_attention"):
+        return _blocked_grouped(q, k, v, causal, window, q_chunk, k_chunk,
+                                q_offset, triangular)
+
+
+def decode_attention(q, k_cache, v_cache, k_positions, *, pos,
+                     window: int | None = None) -> jax.Array:
+    """Single-token decode: q [B,Hq,1,D] against a (possibly ring) cache
+    [B,Hkv,S,D].  ``k_positions`` [S] holds each slot's absolute position
+    (-1 = empty).  Softmax statistics reduce over the cache length, so a
+    sequence-sharded cache turns into XLA all-reduces (distributed decode)."""
+    b, hq, _, d = q.shape
+    hkv = k_cache.shape[1]
+    rep = hq // hkv
+    qg = q.reshape(b, hkv, rep, 1, d)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) / np.sqrt(d)
+    valid = (k_positions >= 0) & (k_positions <= pos)
+    if window is not None:
+        valid &= pos - k_positions < window
+    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    y = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v_cache.dtype), v_cache)
+    return y.reshape(b, hq, 1, d)
+
+
+def apply_attention(p: Params, x: jax.Array, positions: jax.Array,
+                    cfg: ModelConfig, *, causal: bool = True,
+                    impl: str = "auto", q_chunk: int = 512,
+                    k_chunk: int = 1024) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    dims = attn_dims(cfg)
+    q, k, v = _project_qkv(p, x, x, dims)
+    if cfg.rope_theta > 0:
+        q = apply_rope(q, positions[None, None, :], cfg.rope_theta)
+        k = apply_rope(k, positions[None, None, :], cfg.rope_theta)
+    window = cfg.window if cfg.attention_kind == "swa" else None
+    s = x.shape[1]
+    if impl == "auto":
+        impl = "blocked" if s > max(q_chunk, k_chunk) else "reference"
+    if impl in ("blocked", "triangular"):
+        y = blocked_attention(q, k, v, causal=causal, window=window,
+                              q_chunk=min(q_chunk, s), k_chunk=min(k_chunk, s),
+                              triangular=(impl == "triangular"))
+    else:
+        y = reference_attention(q, k, v, causal=causal, window=window)
+    return _merge_heads(p, y)
+
+
+def apply_cross_attention(p: Params, x: jax.Array, ctx: jax.Array,
+                          cfg: ModelConfig) -> jax.Array:
+    """Encoder-decoder cross attention (no positions / mask)."""
+    dims = attn_dims(cfg)
+    q, k, v = _project_qkv(p, x, ctx, dims)
+    y = reference_attention(q, k, v, causal=False)
+    return _merge_heads(p, y)

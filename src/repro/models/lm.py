@@ -1,0 +1,320 @@
+"""The unified causal LM covering the dense / MoE / hybrid / SSM archs.
+
+The layer stack is organized as ``n_groups`` repetitions of the config's
+layer *pattern* (``ModelConfig.pattern()``, length ``period``): parameters
+are stacked ``[n_groups, ...]`` per pattern position and the stack runs under
+one ``jax.lax.scan`` with per-group remat — compile time and HLO size stay
+O(period), independent of depth (phi3's 40 layers and internvl2's 80 layers
+compile the same one-group body).
+
+Decode state (KV caches, SSD states, conv ring buffers) is carried with the
+same ``[n_groups, ...]`` leading axis and scanned alongside the parameters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from . import layers, moe, ssm
+from .types import LayerSpec, ModelConfig
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, spec: LayerSpec) -> Params:
+    ks = layers.split(key, 4)
+    p: Params = {"mixer_norm": layers.init_norm(cfg)}
+    if spec.mixer == "attn":
+        p["attn"] = layers.init_attention(ks[0], cfg)
+    else:
+        p["ssm"] = ssm.init_ssm(ks[0], cfg)
+    if spec.ffn != "none":
+        p["ffn_norm"] = layers.init_norm(cfg)
+        if spec.ffn == "moe":
+            p["moe"] = moe.init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = layers.init_mlp(ks[1], cfg)
+    return p
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    pattern = cfg.pattern()
+    keys = layers.split(key, 3 + len(pattern))
+    params: Params = {
+        "embed": layers.dense_init(keys[0], (cfg.vocab_size, cfg.d_model), dt),
+        "final_norm": layers.init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), dt
+        )
+    groups = []
+    for p_idx, spec in enumerate(pattern):
+        gkeys = layers.split(keys[3 + p_idx], cfg.n_groups)
+        groups.append(jax.vmap(lambda k: _init_block(k, cfg, spec))(gkeys))
+    params["groups"] = tuple(groups)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(
+        int(jnp.size(x)) if hasattr(x, "size") else 0
+        for x in jax.tree.leaves(params)
+    )
+
+
+def abstract_params(cfg: ModelConfig, seed: int = 0):
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(
+        lambda: init_lm(jax.random.key(seed), cfg)
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_block(p: Params, x: jax.Array, positions: jax.Array,
+                 cfg: ModelConfig, spec: LayerSpec, aux: jax.Array,
+                 attn_impl: str) -> tuple[jax.Array, jax.Array]:
+    h = layers.apply_norm(p["mixer_norm"], x, cfg)
+    if spec.mixer == "attn":
+        h = layers.apply_attention(p["attn"], h, positions, cfg,
+                                   impl=attn_impl)
+    else:
+        h = ssm.apply_ssm(p["ssm"], h, cfg)
+    x = sharding.constrain(x + h, "activations")
+    if spec.ffn != "none":
+        h = layers.apply_norm(p["ffn_norm"], x, cfg)
+        if spec.ffn == "moe":
+            h, a = moe.apply_moe(p["moe"], h, cfg)
+            aux = aux + a
+        else:
+            h = layers.apply_mlp(p["mlp"], h)
+        x = sharding.constrain(x + h, "activations")
+    return x, aux
+
+
+def forward(params: Params, batch: dict, cfg: ModelConfig,
+            attn_impl: str = "auto") -> tuple[jax.Array, jax.Array]:
+    """Returns (final hidden states [B,S,D], accumulated MoE aux loss)."""
+    if cfg.input_mode == "embeddings" and "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = sharding.constrain(x, "activations")
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    pattern = cfg.pattern()
+
+    # nested remat: the scan checkpoints each *group* (period layers); each
+    # layer inside the group is checkpointed again so the group's backward
+    # materializes one layer's intermediates at a time (jamba's period-8
+    # groups otherwise hold 8 layers x ~11 [B,S,D] tensors at once).
+    layer_fns = [
+        jax.checkpoint(functools.partial(
+            lambda p, x, aux, positions, *, _spec: _apply_block(
+                p, x, positions, cfg, _spec, aux, attn_impl),
+            _spec=spec))
+        for spec in pattern
+    ]
+
+    def group_body(carry, group_params):
+        x, aux = carry
+        # barrier: stops XLA from hoisting per-step converts of the stacked
+        # remat carries out of the backward loop (a whole-stack f32 copy)
+        x = jax.lax.optimization_barrier(x)
+        for p_idx, spec in enumerate(pattern):
+            # tie this layer's weights to the previous layer's output so the
+            # scheduler cannot gather every layer's FSDP weights up front
+            # (peak memory = one layer's gathered weights, not period x)
+            gp, x = jax.lax.optimization_barrier((group_params[p_idx], x))
+            x, aux = layer_fns[p_idx](gp, x, aux, positions)
+        return (x, aux), None
+
+    body = jax.checkpoint(group_body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), params["groups"])
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    return x, aux
+
+
+def _lm_head(params: Params, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_cross_entropy(x: jax.Array, w_head: jax.Array, labels: jax.Array,
+                          chunk: int = 256) -> jax.Array:
+    """Mean token CE computed over sequence chunks so the [B,S,V] logits are
+    never materialized (vocab up to 202k x 1M tokens otherwise)."""
+    b, s, d = x.shape
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nc = s // c
+    xs = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(total, inp):
+        xc, lc = inp
+        logits = (xc @ w_head).astype(jnp.float32)
+        logits = sharding.constrain(logits, "logits")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return total + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.float32(0.0), (xs, ls))
+    return total / (b * s)
+
+
+def lm_loss(params: Params, batch: dict, cfg: ModelConfig,
+            attn_impl: str = "auto", aux_weight: float = 0.01) -> jax.Array:
+    x, aux = forward(params, batch, cfg, attn_impl)
+    ce = chunked_cross_entropy(x, _lm_head(params, cfg), batch["labels"])
+    return ce + aux_weight * aux
+
+
+def prefill_logits(params: Params, batch: dict, cfg: ModelConfig,
+                   attn_impl: str = "auto") -> jax.Array:
+    """Prefill: full-sequence forward, logits of the last position only."""
+    x, _ = forward(params, batch, cfg, attn_impl)
+    last = x[:, -1, :]
+    return (last @ _lm_head(params, cfg)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.attention_kind == "swa":
+        return min(cfg.window, seq_len)
+    return seq_len
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, seq_len: int) -> dict:
+    """Decode-state pytree; every leaf has leading dim ``n_groups``.
+
+    ``cfg.kv_quant`` stores K/V as int8 with a per-(token, head) scale —
+    halving the decode memory term (KV reads dominate it); dequantization is
+    fused into the attention reads."""
+    dt = jnp.int8 if cfg.kv_quant else jnp.dtype(cfg.dtype)
+    dims = layers.attn_dims(cfg)
+    g = cfg.n_groups
+    s_c = cache_len(cfg, seq_len)
+    caches = []
+    for spec in cfg.pattern():
+        if spec.mixer == "attn":
+            c = {
+                "k": jnp.zeros((g, batch, dims.n_kv, s_c, dims.d_head), dt),
+                "v": jnp.zeros((g, batch, dims.n_kv, s_c, dims.d_head), dt),
+            }
+            if cfg.kv_quant:
+                c["k_scale"] = jnp.zeros((g, batch, dims.n_kv, s_c),
+                                         jnp.float32)
+                c["v_scale"] = jnp.zeros((g, batch, dims.n_kv, s_c),
+                                         jnp.float32)
+            caches.append(c)
+        else:
+            one = ssm.init_ssm_cache(cfg, batch)
+            caches.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (g,) + a.shape), one
+            ))
+    return {"pos": jnp.int32(0), "layers": tuple(caches)}
+
+
+def _quantize_kv(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: [B,H,1,D] -> (int8 values, per-(B,H,1) scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _decode_attn(p: Params, x: jax.Array, c: dict, pos: jax.Array,
+                 cfg: ModelConfig):
+    kc, vc = c["k"], c["v"]
+    dims = layers.attn_dims(cfg)
+    q, k, v = layers._project_qkv(p, x, x, dims)
+    if cfg.rope_theta > 0:
+        pp = jnp.full((1, 1, 1), pos)
+        q = layers.apply_rope(q, pp, cfg.rope_theta)
+        k = layers.apply_rope(k, pp, cfg.rope_theta)
+    s_c = kc.shape[2]
+    if cfg.attention_kind == "swa" and s_c == cfg.window:
+        slot = pos % s_c
+        slot_ids = jnp.arange(s_c)
+        k_positions = pos - (pos - slot_ids) % s_c   # < 0 for unwritten slots
+        window = cfg.window
+    else:
+        slot = pos
+        k_positions = jnp.arange(s_c)
+        window = cfg.window if cfg.attention_kind == "swa" else None
+    new_c = {}
+    if cfg.kv_quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        kc = jax.lax.dynamic_update_slice(kc, kq, (0, 0, slot, 0))
+        vc = jax.lax.dynamic_update_slice(vc, vq, (0, 0, slot, 0))
+        ksc = jax.lax.dynamic_update_slice(c["k_scale"], ks, (0, 0, slot))
+        vsc = jax.lax.dynamic_update_slice(c["v_scale"], vs, (0, 0, slot))
+        new_c.update(k_scale=ksc, v_scale=vsc)
+        k_read = kc.astype(jnp.bfloat16) * ksc[..., None].astype(jnp.bfloat16)
+        v_read = vc.astype(jnp.bfloat16) * vsc[..., None].astype(jnp.bfloat16)
+    else:
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, 0, slot, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, 0, slot, 0))
+        k_read, v_read = kc, vc
+    new_c.update(k=kc, v=vc)
+    y = layers.decode_attention(q, k_read, v_read, k_positions, pos=pos,
+                                window=window)
+    return layers._merge_heads(p, y), new_c
+
+
+def decode_step(params: Params, tokens: jax.Array, cache: dict,
+                cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One serving step: tokens [B,1] -> (logits [B,V], updated cache)."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)        # [B,1,D]
+    pattern = cfg.pattern()
+
+    def group_body(x, inp):
+        group_params, group_cache = inp
+        new_caches = []
+        for p_idx, spec in enumerate(pattern):
+            p = group_params[p_idx]
+            c = group_cache[p_idx]
+            h = layers.apply_norm(p["mixer_norm"], x, cfg)
+            if spec.mixer == "attn":
+                h, new_c = _decode_attn(p["attn"], h, c, pos, cfg)
+                new_caches.append(new_c)
+            else:
+                h, new_c = ssm.decode_ssm(p["ssm"], h, c, cfg)
+                new_caches.append(new_c)
+            x = x + h
+            if spec.ffn != "none":
+                h = layers.apply_norm(p["ffn_norm"], x, cfg)
+                if spec.ffn == "moe":
+                    h, _ = moe.apply_moe(p["moe"], h, cfg)
+                else:
+                    h = layers.apply_mlp(p["mlp"], h)
+                x = x + h
+        return x, tuple(new_caches)
+
+    x, new_layer_caches = jax.lax.scan(
+        group_body, x, (params["groups"], cache["layers"])
+    )
+    x = layers.apply_norm(params["final_norm"], x, cfg)
+    logits = (x[:, 0, :] @ _lm_head(params, cfg)).astype(jnp.float32)
+    logits = sharding.constrain(logits, "decode_logits")
+    return logits, {"pos": pos + 1, "layers": new_layer_caches}

@@ -1,0 +1,104 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-bounded einsum dispatch
+(GShard/Switch style).
+
+Why einsum dispatch: with experts sharded over the ``model`` mesh axis
+(expert parallelism), the ``gsec,gsd->egcd`` dispatch einsum lowers to the
+all-to-all exchange pattern; each device then only touches its *own* expert
+partition — the paper's coherence-free "virtual SPM" argument (§3.3) mapped
+onto static sharding (DESIGN.md §3).
+
+Routing indices form the irregular access stream of this workload family;
+:mod:`repro.core.runahead` consumes traced routing streams to drive the
+Algorithm-1 allocator, and :mod:`repro.kernels.moe_dispatch` implements the
+gather/scatter as a Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from . import layers
+from .types import ModelConfig
+
+Params = dict
+
+
+def moe_capacity(cfg: ModelConfig, group_size: int) -> int:
+    cap = int(group_size * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(4, -(-cap // 4) * 4)  # round up to a multiple of 4
+
+
+def init_moe(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = layers.split(key, 5)
+    p = {
+        "router": layers.dense_init(ks[0], (d, e), jnp.float32),
+        "wi_gate": layers.dense_init(ks[1], (e, d, f), dt),
+        "wi_up": layers.dense_init(ks[2], (e, d, f), dt),
+        "wo": layers.dense_init(ks[3], (e, f, d), dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.init_mlp(ks[4], cfg)
+    return p
+
+
+def apply_moe(p: Params, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """x: [..., D] (any leading shape); returns (y, aux_load_balance_loss)."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    tokens = x.reshape(-1, d)
+    n_tok = tokens.shape[0]
+    gs = min(cfg.moe_group_size, n_tok)
+    assert n_tok % gs == 0, (n_tok, gs)
+    g = n_tok // gs
+    xt = tokens.reshape(g, gs, d)
+    e = cfg.n_experts
+    cap = moe_capacity(cfg, gs)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # [G,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, cfg.top_k)           # [G,S,K]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # capacity assignment, choice-priority order (GShard)
+    counts = jnp.zeros((g, e), jnp.float32)
+    dispatch = jnp.zeros((g, gs, e, cap), jnp.bfloat16)
+    combine = jnp.zeros((g, gs, e, cap), jnp.bfloat16)
+    for i in range(cfg.top_k):
+        mask_i = jax.nn.one_hot(top_i[..., i], e, dtype=jnp.float32)  # [G,S,E]
+        pos_i = jnp.cumsum(mask_i, axis=1) - mask_i + counts[:, None, :]
+        keep = (pos_i < cap).astype(jnp.float32) * mask_i
+        counts = counts + keep.sum(axis=1)
+        slot = jax.nn.one_hot(pos_i.astype(jnp.int32), cap,
+                              dtype=jnp.bfloat16)             # [G,S,E,C]
+        d_i = keep.astype(jnp.bfloat16)[..., None] * slot
+        dispatch = dispatch + d_i
+        combine = combine + top_w[..., i].astype(jnp.bfloat16)[..., None, None] * d_i
+
+    # all-to-all: tokens -> expert shards (e is model-sharded)
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch, xt.astype(jnp.bfloat16))
+    xe = sharding.constrain(xe, "expert_tokens")
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, p["wi_gate"]))
+    h = h * jnp.einsum("egcd,edf->egcf", xe, p["wi_up"])
+    ye = jnp.einsum("egcf,efd->egcd", h, p["wo"])
+    ye = sharding.constrain(ye, "expert_tokens")
+    y = jnp.einsum("egcd,gsec->gsd", ye, combine)
+
+    if cfg.n_shared_experts:
+        y = y + layers.apply_mlp(p["shared"], xt.astype(x.dtype)).astype(y.dtype)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    route_frac = jax.nn.one_hot(top_i[..., 0], e).mean(axis=(0, 1))
+    prob_frac = probs.mean(axis=(0, 1))
+    aux = e * jnp.sum(route_frac * prob_frac)
+    return y.reshape(orig_shape).astype(x.dtype), aux
+
+
+def routing_trace(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Expert indices chosen per token — the irregular index stream fed to
+    the runahead/Algorithm-1 tooling (core/runahead)."""
+    logits = x.reshape(-1, x.shape[-1]).astype(jnp.float32) @ p["router"]
+    _, top_i = jax.lax.top_k(jax.nn.softmax(logits, -1), cfg.top_k)
+    return top_i

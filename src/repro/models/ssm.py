@@ -1,0 +1,214 @@
+"""Mamba-2 (SSD, state-space duality) mixer [arXiv:2405.21060].
+
+Chunked "matmul form" for train/prefill (MXU-friendly: intra-chunk terms are
+batched GEMMs; inter-chunk state is a short ``lax.scan``), plus an O(1)
+single-token recurrence for decode.  One state group (``n_groups=1``): B and
+C are shared across heads.
+
+Sharding notes (why the projections are *separate* weights rather than one
+fused ``in_proj``): the fused layout slices z|x|B|C|dt at offsets that do not
+align with a 16-way model sharding, which forces GSPMD to replicate the whole
+[B,S,2*di+2N+H] activation (8 GiB/layer f32 at jamba scale).  With separate
+projections, z/x/dt shard over "model" (d_inner and heads are divisible) and
+the small B/C streams stay replicated; everything downstream stays local.
+
+Shapes: d_inner = expand * d_model, H = d_inner / ssm_d_head heads of size P,
+state size N = ssm_state, depthwise causal conv width W over x, B and C.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import sharding
+from . import layers
+from .types import ModelConfig
+
+Params = dict
+
+
+def init_ssm(key, cfg: ModelConfig) -> Params:
+    dt = jnp.dtype(cfg.dtype)
+    d = cfg.d_model
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    ks = layers.split(key, 8)
+    return {
+        "in_z": layers.dense_init(ks[0], (d, di), dt),
+        "in_x": layers.dense_init(ks[1], (d, di), dt),
+        "in_b": layers.dense_init(ks[2], (d, n), dt),
+        "in_c": layers.dense_init(ks[3], (d, n), dt),
+        "in_dt": layers.dense_init(ks[4], (d, h), dt),
+        "conv_x": layers.dense_init(ks[5], (cfg.ssm_conv, di), dt, scale=0.1),
+        "conv_bx": jnp.zeros((di,), dt),
+        "conv_b": layers.dense_init(ks[6], (cfg.ssm_conv, n), dt, scale=0.1),
+        "conv_bb": jnp.zeros((n,), dt),
+        "conv_c": layers.dense_init(ks[7], (cfg.ssm_conv, n), dt, scale=0.1),
+        "conv_bc": jnp.zeros((n,), dt),
+        "A_log": jnp.zeros((h,), jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": layers.dense_init(ks[4], (di, d), dt),
+    }
+
+
+def _causal_conv(x, w, b, *, state=None):
+    """Depthwise causal conv over seq.  x: [B,S,C]; w: [W,C]; optional ring
+    ``state`` [B,W-1,C] (decode) is consumed and returned updated."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (width - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    full = jnp.concatenate([pad, x], axis=1)             # [B, S+W-1, C]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(width):
+        out = out + full[:, i:i + x.shape[1], :].astype(jnp.float32) * w[i]
+    out = jax.nn.silu(out + b.astype(jnp.float32))
+    new_state = full[:, -(width - 1):, :] if width > 1 else pad
+    return out.astype(x.dtype), new_state
+
+
+def _gated_norm(y, z, scale, eps):
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(ms + eps) * scale)
+
+
+def ssd_chunked(xh, dt, a_log, b_mat, c_mat, d_skip, *, chunk: int,
+                init_state=None):
+    """SSD scan in chunked matmul form.
+
+    Args:
+      xh:    [B, S, H, P] head inputs
+      dt:    [B, S, H]    softplus'd step sizes
+      a_log: [H]          A = -exp(a_log)
+      b_mat: [B, S, N]    input projections (shared across heads)
+      c_mat: [B, S, N]    output projections
+      d_skip:[H]          skip connection
+      init_state: [B, H, P, N] or None
+
+    Returns: (y [B,S,H,P], final_state [B,H,P,N])
+    """
+    bsz, s, h, p = xh.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    la = dt * (-jnp.exp(a_log))                           # [B,S,H] log-decay
+    # chunk-major layout for lax.scan; constraints pin the head sharding
+    # through the while loop (GSPMD otherwise replicates the stacks)
+    xc = xh.reshape(bsz, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    dtc = dt.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3)
+    lac = la.reshape(bsz, nc, q, h).transpose(1, 0, 2, 3)
+    bc = b_mat.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3)
+    cc = c_mat.reshape(bsz, nc, q, n).transpose(1, 0, 2, 3)
+    xc = sharding.constrain(xc, "ssd_xs5")
+    dtc = sharding.constrain(dtc, "ssd_xs4")
+    lac = sharding.constrain(lac, "ssd_xs4")
+
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    init_state = sharding.constrain(init_state, "ssd_state")
+
+    @jax.checkpoint
+    def chunk_step(s_prev, inp):
+        x_c, dt_c, la_c, b_c, c_c = inp                   # per-chunk slices
+        cum = jnp.cumsum(la_c, axis=1)                    # [B,Q,H]
+        total = cum[:, -1, :]                             # [B,H]
+        # intra-chunk: Y[i] = sum_{j<=i} C_i.B_j exp(cum_i - cum_j) dt_j x_j
+        seg = cum[:, :, None, :] - cum[:, None, :, :]     # [B,Qi,Qj,H]
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", c_c, b_c,
+                            preferred_element_type=jnp.float32)
+        att = scores[..., None] * decay                   # [B,Qi,Qj,H]
+        xdt = (x_c * dt_c[..., None]).astype(jnp.float32)
+        y_intra = jnp.einsum("bijh,bjhp->bihp", att, xdt)
+        # inter-chunk output: C_i . (exp(cum_i) * S_prev)
+        w_out = jnp.exp(cum)                              # [B,Q,H]
+        y_inter = jnp.einsum("bin,bhpn->bihp", c_c.astype(jnp.float32), s_prev)
+        y_inter = y_inter * w_out[..., None]
+        # state update: S = exp(total) S_prev + sum_j exp(total-cum_j) dt_j B_j x_j
+        w_in = jnp.exp(total[:, None, :] - cum) * dt_c    # [B,Q,H]
+        s_new = s_prev * jnp.exp(total)[:, :, None, None] + jnp.einsum(
+            "bjn,bjh,bjhp->bhpn", b_c.astype(jnp.float32), w_in,
+            x_c.astype(jnp.float32))
+        y = y_intra + y_inter + d_skip[None, None, :, None] * x_c.astype(jnp.float32)
+        s_new = sharding.constrain(s_new, "ssd_state")
+        y = sharding.constrain(y, "ssd_y")
+        return s_new, y
+
+    final_state, ys = jax.lax.scan(chunk_step, init_state,
+                                   (xc, dtc, lac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def _project(p: Params, x: jax.Array, cfg: ModelConfig):
+    z = x @ p["in_z"]
+    xin = x @ p["in_x"]
+    b_mat = x @ p["in_b"]
+    c_mat = x @ p["in_c"]
+    dt_raw = x @ p["in_dt"]
+    return z, xin, b_mat, c_mat, dt_raw
+
+
+def apply_ssm(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence Mamba-2 mixer (train / prefill)."""
+    h = cfg.ssm_heads
+    z, xin, b_mat, c_mat, dt_raw = _project(p, x, cfg)
+    xin, _ = _causal_conv(xin, p["conv_x"], p["conv_bx"])
+    b_mat, _ = _causal_conv(b_mat, p["conv_b"], p["conv_bb"])
+    c_mat, _ = _causal_conv(c_mat, p["conv_c"], p["conv_bc"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    xh = xin.reshape(*xin.shape[:-1], h, cfg.ssm_d_head)
+    with jax.named_scope("ssd_scan"):
+        y, _ = ssd_chunked(xh, dt, p["A_log"], b_mat, c_mat, p["D"],
+                           chunk=cfg.ssm_chunk)
+    y = y.reshape(*x.shape[:-1], cfg.d_inner)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    return (y.astype(x.dtype)) @ p["out_proj"]
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int):
+    """Decode state: SSD state + per-stream conv ring buffers (O(1) in S)."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    dt = jnp.dtype(cfg.dtype)
+    w = cfg.ssm_conv - 1
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_d_head, n),
+                           jnp.float32),
+        "conv_x": jnp.zeros((batch, w, di), dt),
+        "conv_b": jnp.zeros((batch, w, n), dt),
+        "conv_c": jnp.zeros((batch, w, n), dt),
+    }
+
+
+def decode_ssm(p: Params, x: jax.Array, cache: dict, cfg: ModelConfig):
+    """Single-token recurrence.  x: [B,1,D] -> (y [B,1,D], new cache)."""
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xin, b_mat, c_mat, dt_raw = _project(p, x, cfg)
+    xin, conv_x = _causal_conv(xin, p["conv_x"], p["conv_bx"],
+                               state=cache["conv_x"])
+    b_mat, conv_b = _causal_conv(b_mat, p["conv_b"], p["conv_bb"],
+                                 state=cache["conv_b"])
+    c_mat, conv_c = _causal_conv(c_mat, p["conv_c"], p["conv_bc"],
+                                 state=cache["conv_c"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,1,H]
+    xh = xin.reshape(xin.shape[0], h, cfg.ssm_d_head)    # squeeze seq dim
+    a = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt[:, 0, :] * a)                      # [B,H]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0, :], xh.astype(jnp.float32),
+                     b_mat[:, 0, :].astype(jnp.float32))
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c_mat[:, 0, :].astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(x.shape[0], 1, di)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps)
+    out = y.astype(x.dtype) @ p["out_proj"]
+    return out, {"state": state, "conv_x": conv_x, "conv_b": conv_b,
+                 "conv_c": conv_c}

@@ -1,0 +1,28 @@
+"""Elastic scaling: re-shard a training state onto a different mesh.
+
+When a pod is lost (or gained), the job restarts with a new
+``make_production_mesh``-style mesh; parameters keep their *logical* specs
+and only the device assignment changes.  ``reshard`` moves a live state;
+checkpoint-based elasticity goes through ``Checkpointer.restore`` with the
+new target shardings (no resharding pass needed — each host reads its new
+byte ranges).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.sharding.rules import MeshRules
+
+
+def reshard(tree: Any, rules: MeshRules, spec_tree: Any) -> Any:
+    """Device-put every leaf to the new mesh with its logical spec."""
+    named = rules.named(spec_tree)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(x), s), tree, named)
+
+
+def reshard_state(state: Any, rules: MeshRules) -> Any:
+    return reshard(state, rules, rules.state_specs(state))

@@ -1,0 +1,3 @@
+from .ctx import constrain, constrainer
+
+__all__ = ["constrain", "constrainer"]

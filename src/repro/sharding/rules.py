@@ -1,0 +1,245 @@
+"""Mesh sharding rules: parameters, optimizer state, inputs, decode caches,
+activation constraints.
+
+Strategy (baseline; §Perf iterates on it):
+
+* **FSDP x TP**: weight matrices are sharded 2-D — the contracting/input dim
+  over ``data`` (fully-sharded parameters, all-gathered per layer on use,
+  gradients reduce-scattered) and the output/head/ffn dim over ``model``
+  (Megatron tensor parallelism).
+* **EP = virtual SPM** (DESIGN.md §3): MoE expert stacks are sharded over
+  ``model`` — each device owns its expert partition outright; the dispatch
+  einsum becomes the all-to-all.  Vocab embeddings are likewise partitioned
+  over ``model``.
+* **Multi-pod**: the ``pod`` axis extends *data parallelism of the batch*
+  (gradients all-reduce across pods over DCI) while parameters stay sharded
+  within a pod — the standard hybrid-FSDP layout, so cross-pod traffic is
+  one gradient reduction per step rather than per-layer all-gathers.
+* **Decode caches**: batch over ``data`` when divisible; for single-sequence
+  long-context cells the cache *sequence* dim shards over ``data`` instead,
+  turning softmax statistics into cross-device reductions (distributed
+  decode attention).
+
+Head-count divisibility: GSPMD pads uneven shardings (e.g. phi3's 40 heads
+on a 16-way axis); the MODEL_FLOPS/HLO_FLOPs roofline ratio surfaces the
+waste and §Perf addresses the worst cases.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.types import ModelConfig, ShapeConfig
+
+
+def _leaf_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "name"):
+            names.append(str(k.name))
+    return names
+
+
+@dataclasses.dataclass
+class MeshRules:
+    mesh: Mesh
+    multi_pod: bool = False
+    # Megatron-style sequence parallelism: the residual stream (and hence the
+    # per-layer remat carry stack) is sharded over "model" along seq — an 80L
+    # d=8192 model otherwise stores an 86 GiB/device carry stack at train_4k.
+    sequence_parallel: bool = True
+    fsdp: bool = True
+
+    @property
+    def dp(self):
+        """Axes carrying the batch (data parallel)."""
+        return ("pod", "data") if self.multi_pod else ("data",)
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def wd(self):
+        """Axis sharding the weight contracting dim (FSDP)."""
+        return "data" if self.fsdp else None
+
+    def _axis_if_divisible(self, size: int, axis):
+        if axis is None:
+            return None
+        n = 1
+        for a in (axis if isinstance(axis, tuple) else (axis,)):
+            n *= self.mesh.shape[a]
+        return axis if size % n == 0 else None
+
+    # -- parameters ----------------------------------------------------------
+    def _param_rule(self, names: list[str], shape: tuple) -> P:
+        name = names[-1]
+        ndim = len(shape)
+        wd, mdl = self.wd, "model"
+        if name == "embed":
+            return P(self._axis_if_divisible(shape[0], mdl), None)
+        if name == "lm_head":
+            return P(None, self._axis_if_divisible(shape[1], mdl))
+        if name == "router":
+            return P(None, wd, None)
+        if name in ("wk", "wv"):
+            # KV heads (2..12) never divide the 16-way model axis across the
+            # assigned archs: replicate KV projections over "model" (Megatron
+            # GQA practice for TP > kv_heads); the head expansion inside
+            # flash attention is then shard-local.
+            return P(None, wd, None)
+        if name in ("wq", "wi", "wi_gate", "wi_up", "in_z", "in_x", "in_dt"):
+            if ndim == 4:                      # MoE expert stack [G,E,d,f]
+                return P(None, mdl, wd, None)
+            return P(None, wd, mdl)            # [G,d,out]
+        if name in ("in_b", "in_c"):           # small SSD B/C streams
+            return P(None, wd, None)
+        if name in ("wo", "out_proj"):
+            if ndim == 4:                      # [G,E,f,d]
+                return P(None, mdl, None, wd)
+            return P(None, mdl, wd)            # [G,in,d]
+        if name == "bq":
+            return P(None, mdl)
+        if name in ("bk", "bv"):
+            return P(None, None)
+        if name == "conv_x":
+            return P(None, None, mdl)
+        if name == "conv_bx":
+            return P(None, mdl)
+        return P()                             # norms, A_log, B/C convs, ...
+
+    def param_specs(self, params_abs) -> Any:
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: self._param_rule(_leaf_names(path), leaf.shape),
+            params_abs,
+        )
+
+    def state_specs(self, state_abs) -> Any:
+        """Optimizer state: moments shard like their parameters."""
+        p_specs = self.param_specs(state_abs["params"])
+        return {
+            "params": p_specs,
+            "m": p_specs,
+            "v": p_specs,
+            "step": P(),
+        }
+
+    # -- inputs --------------------------------------------------------------
+    def _batch_axis(self, b: int):
+        return self.dp if b % self.dp_size == 0 else None
+
+    def batch_specs(self, specs: dict) -> dict:
+        out = {}
+        for k, v in specs.items():
+            bdim = self._batch_axis(v.shape[0])
+            out[k] = P(bdim, *([None] * (len(v.shape) - 1)))
+        return out
+
+    # -- decode cache ---------------------------------------------------------
+    def cache_specs(self, cache_abs, batch: int) -> Any:
+        b_ax = self._batch_axis(batch)
+        # KV-head counts (2..12) never divide the 16-way model axis, so the
+        # cache shards its *sequence* over "model" — decode attention's
+        # softmax statistics then reduce across devices (distributed flash
+        # decode).  Single-sequence long-context cells (batch=1) spread the
+        # sequence over every axis instead.
+        seq_ax = "model" if b_ax is not None else ("data", "model")
+
+        def rule(path, leaf):
+            names = _leaf_names(path)
+            name = names[-1] if names else ""
+            if leaf.ndim == 0:
+                return P()
+            if name in ("k", "v", "self_k", "self_v", "cross_k", "cross_v"):
+                # [G, B, Hkv, S, Dh]
+                return P(None, b_ax, None,
+                         self._axis_if_divisible(leaf.shape[3], seq_ax), None)
+            if name in ("k_scale", "v_scale"):  # [G, B, Hkv, S]
+                return P(None, b_ax, None,
+                         self._axis_if_divisible(leaf.shape[3], seq_ax))
+            if name == "state":               # [G, B, H, P, N]
+                return P(None, b_ax,
+                         self._axis_if_divisible(leaf.shape[2], "model"),
+                         None, None)
+            if name == "conv_x":              # [G, B, W-1, d_inner]
+                return P(None, b_ax, None,
+                         self._axis_if_divisible(leaf.shape[3], "model"))
+            if name in ("conv_b", "conv_c"):  # [G, B, W-1, N] (small)
+                return P(None, b_ax, None, None)
+            return P()
+
+        return jax.tree_util.tree_map_with_path(rule, cache_abs)
+
+    # -- activation constraints (installed via sharding.ctx) ------------------
+    def constrain_fn(self):
+        dp = self.dp
+        sp = "model" if self.sequence_parallel else None
+
+        def fn(x, kind: str):
+            if kind == "activations" and x.ndim == 3:
+                seq_ok = sp and x.shape[1] % self.mesh.shape["model"] == 0
+                spec = P(dp if x.shape[0] % self.dp_size == 0 else None,
+                         sp if seq_ok else None, None)
+            elif kind == "logits" and x.ndim == 3:
+                spec = P(dp if x.shape[0] % self.dp_size == 0 else None,
+                         None, "model")
+            elif kind == "decode_logits" and x.ndim == 2:
+                spec = P(dp if x.shape[0] % self.dp_size == 0 else None,
+                         "model")
+            elif kind == "expert_tokens":      # [E, G, C, D]
+                # experts own their partition (EP = virtual SPM, DESIGN §3);
+                # the group dim keeps the batch's data sharding, so the
+                # dispatch einsum is an all-to-all between the two axes.
+                g_ok = x.shape[1] % self.dp_size == 0
+                spec = P("model", dp if g_ok else None, None, None)
+            elif kind == "attn_heads" and x.ndim == 4:
+                # [B, H, S, D] — full-head layout used throughout flash
+                b_ok = x.shape[0] % self.dp_size == 0
+                spec = P(dp if b_ok else None, "model", None, None)
+            elif kind == "attn_kv_rep" and x.ndim == 4:
+                # [B, Hkv, S, D] — KV heads replicated over "model"
+                b_ok = x.shape[0] % self.dp_size == 0
+                spec = P(dp if b_ok else None, None, None, None)
+            elif kind == "ssd_xs5" and x.ndim == 5:
+                # [nc, B, Q, H, P]
+                b_ok = x.shape[1] % self.dp_size == 0
+                spec = P(None, dp if b_ok else None, None,
+                         self._axis_if_divisible(x.shape[3], "model"), None)
+            elif kind == "ssd_xs4" and x.ndim == 4:
+                # [nc, B, Q, H]
+                b_ok = x.shape[1] % self.dp_size == 0
+                spec = P(None, dp if b_ok else None, None,
+                         self._axis_if_divisible(x.shape[3], "model"))
+            elif kind == "ssd_state" and x.ndim == 4:
+                # [B, H, P, N]
+                b_ok = x.shape[0] % self.dp_size == 0
+                spec = P(dp if b_ok else None,
+                         self._axis_if_divisible(x.shape[1], "model"),
+                         None, None)
+            elif kind == "ssd_y" and x.ndim == 4:
+                # [B, Q, H, P]
+                b_ok = x.shape[0] % self.dp_size == 0
+                spec = P(dp if b_ok else None, None,
+                         self._axis_if_divisible(x.shape[2], "model"), None)
+            else:
+                return x
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, spec))
+
+        return fn
+
+    # -- helpers ---------------------------------------------------------------
+    def named(self, spec_tree):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda s: isinstance(s, P),
+        )

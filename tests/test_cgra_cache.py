@@ -1,0 +1,96 @@
+"""Property tests pinning the three cache implementations to each other.
+
+OracleCache (naive dict LRU)  <->  Cache (timing model)  <->  jaxcache (vmap).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cgra.cache import Cache, CacheConfig, OracleCache
+from repro.core.cgra import jaxcache
+
+cfg_strategy = st.builds(
+    CacheConfig,
+    ways=st.integers(min_value=1, max_value=8),
+    line=st.sampled_from([16, 32, 64, 128]),
+    way_bytes=st.sampled_from([256, 512, 1024]),
+)
+addr_strategy = st.lists(
+    st.integers(min_value=0, max_value=1 << 16), min_size=1, max_size=300
+)
+
+
+def timing_cache_hits(cfg: CacheConfig, addrs) -> list[bool]:
+    """Drive the timing Cache with the pure hit/miss protocol."""
+    c = Cache(cfg)
+    out = []
+    for a in addrs:
+        line = c.line_addr(a)
+        e = c.probe(line)
+        if e is not None:
+            c.touch(e)
+            out.append(True)
+        else:
+            c.install(line, ready=0)
+            out.append(False)
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(cfg=cfg_strategy, addrs=addr_strategy)
+def test_timing_cache_matches_oracle(cfg, addrs):
+    assert timing_cache_hits(cfg, addrs) == OracleCache(cfg).run(addrs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(cfg=cfg_strategy, addrs=addr_strategy)
+def test_jax_cache_matches_oracle(cfg, addrs):
+    grid = jaxcache.ConfigGrid.build(cfg.way_bytes, [cfg.ways], [cfg.line])
+    hits = jaxcache.hit_series(np.asarray(addrs), grid)[0]
+    assert hits.tolist() == OracleCache(cfg).run(addrs)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    addrs=addr_strategy,
+    ways=st.integers(min_value=1, max_value=6),
+    line=st.sampled_from([16, 64]),
+)
+def test_lru_stack_property(addrs, ways, line):
+    """With fixed sets, LRU hits are monotone non-decreasing in ways."""
+    lo = CacheConfig(ways=ways, line=line, way_bytes=512)
+    hi = CacheConfig(ways=ways + 1, line=line, way_bytes=512)
+    # same number of sets is required for inclusion; way_bytes fixes sets.
+    h_lo = sum(OracleCache(lo).run(addrs))
+    h_hi = sum(OracleCache(hi).run(addrs))
+    assert h_hi >= h_lo
+
+
+def test_zero_way_cache_never_hits():
+    cfg = CacheConfig(ways=0, line=64, way_bytes=512)
+    assert OracleCache(cfg).run([0, 0, 0]) == [False, False, False]
+    grid = jaxcache.ConfigGrid.build(512, [0], [64])
+    hits = jaxcache.hit_series(np.zeros(3, np.int64), grid)[0]
+    assert not hits.any()
+
+
+def test_grid_covers_multiple_configs_at_once():
+    rng = np.random.default_rng(0)
+    addrs = rng.integers(0, 1 << 14, size=500)
+    grid = jaxcache.ConfigGrid.build(512, [1, 2, 4], [16, 64])
+    hits = jaxcache.hit_series(addrs, grid)
+    assert hits.shape == (6, 500)
+    for c in range(len(grid)):
+        cfg = CacheConfig(
+            ways=int(grid.ways[c]), line=int(grid.lines[c]),
+            way_bytes=int(grid.lines[c] * grid.sets[c]),
+        )
+        assert hits[c].tolist() == OracleCache(cfg).run(addrs), f"config {c}"
+
+
+def test_virtual_line_merge_reduces_sets():
+    """Virtual-line growth within a fixed-size way halves the sets (§3.4.1)."""
+    base = CacheConfig(ways=4, line=32, way_bytes=1024)
+    merged = CacheConfig(ways=4, line=64, way_bytes=1024)
+    assert merged.sets == base.sets // 2
+    assert merged.size == base.size

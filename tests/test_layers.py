@@ -1,0 +1,203 @@
+"""Numerical correctness of the layer library: blocked (flash-style)
+attention vs the reference oracle, decode vs prefill consistency, SSD
+chunked scan vs a naive per-token recurrence."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers, ssm
+from repro.models.types import ModelConfig
+
+
+def mk_qkv(rng, b=2, hq=4, hkv=2, sq=64, sk=64, d=16, dtype=jnp.float32):
+    q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, hkv, sk, d)), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [None, 24])
+@pytest.mark.parametrize("causal", [True, False])
+def test_blocked_matches_reference(causal, window):
+    rng = np.random.default_rng(0)
+    q, k, v = mk_qkv(rng)
+    ref = layers.reference_attention(q, k, v, causal=causal, window=window)
+    out = layers.blocked_attention(q, k, v, causal=causal, window=window,
+                                   q_chunk=16, k_chunk=32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    sq=st.sampled_from([32, 64, 128]),
+    qc=st.sampled_from([8, 16, 32]),
+    kc=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 5),
+)
+def test_blocked_chunk_invariance(sq, qc, kc, seed):
+    """Output must not depend on chunking choices."""
+    rng = np.random.default_rng(seed)
+    q, k, v = mk_qkv(rng, sq=sq, sk=sq)
+    ref = layers.reference_attention(q, k, v, causal=True)
+    out = layers.blocked_attention(q, k, v, causal=True,
+                                   q_chunk=min(qc, sq), k_chunk=min(kc, sq))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_blocked_bf16_tolerance():
+    rng = np.random.default_rng(1)
+    q, k, v = mk_qkv(rng, dtype=jnp.bfloat16, sq=128, sk=128)
+    ref = layers.reference_attention(q, k, v, causal=True)
+    out = layers.blocked_attention(q, k, v, causal=True, q_chunk=32, k_chunk=32)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("window", [None, 24])
+def test_blocked_attention_custom_vjp_grads(window):
+    """The flash-style custom backward must match autodiff through the
+    reference implementation."""
+    rng = np.random.default_rng(7)
+    q, k, v = mk_qkv(rng, sq=64, sk=64)
+
+    def loss_ref(q, k, v):
+        y = layers.reference_attention(q, k, v, causal=True, window=window)
+        return jnp.sum(jnp.sin(y))
+
+    def loss_blk(q, k, v):
+        y = layers.blocked_attention(q, k, v, causal=True, window=window,
+                                     q_chunk=16, k_chunk=32)
+        return jnp.sum(jnp.sin(y))
+
+    g_ref = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    g_blk = jax.grad(loss_blk, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_ref, g_blk):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("sq", [64, 96, 128])
+def test_triangular_scheduling_matches_reference(sq):
+    """The paired-chunk (half-FLOPs) schedule must be numerically identical
+    to the naive schedule and the reference (odd/even chunk counts)."""
+    rng = np.random.default_rng(11)
+    q, k, v = mk_qkv(rng, sq=sq, sk=sq)
+    ref = layers.reference_attention(q, k, v, causal=True)
+    tri = layers.blocked_attention(q, k, v, causal=True, q_chunk=32,
+                                   k_chunk=32, triangular=True)
+    np.testing.assert_allclose(np.asarray(tri), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+    def loss_tri(q, k, v):
+        y = layers.blocked_attention(q, k, v, causal=True, q_chunk=32,
+                                     k_chunk=32, triangular=True)
+        return jnp.sum(jnp.sin(y))
+
+    def loss_ref(q, k, v):
+        return jnp.sum(jnp.sin(
+            layers.reference_attention(q, k, v, causal=True)))
+
+    g_t = jax.grad(loss_tri, argnums=(0, 1, 2))(q, k, v)
+    g_r = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_r, g_t):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=3e-4, atol=3e-4)
+
+
+def test_decode_attention_matches_prefill_last_row():
+    """Decoding token t over a cache must equal row t of full attention."""
+    rng = np.random.default_rng(2)
+    b, hq, hkv, s, d = 2, 4, 2, 32, 16
+    q, k, v = mk_qkv(rng, b=b, hq=hq, hkv=hkv, sq=s, sk=s, d=d)
+    full = layers.reference_attention(q, k, v, causal=True)
+    pos = s - 1
+    out = layers.decode_attention(q[:, :, pos:pos + 1], k, v,
+                                  jnp.arange(s), pos=pos)
+    np.testing.assert_allclose(np.asarray(out[:, :, 0]),
+                               np.asarray(full[:, :, pos]), rtol=2e-5, atol=2e-5)
+
+
+def test_swa_ring_cache_positions():
+    """Ring-buffer slot positions: slots not yet written resolve to < 0."""
+    window = 8
+    pos = 5  # fewer tokens than window so slots 6..7 are unwritten
+    slot_ids = jnp.arange(window)
+    k_positions = pos - (pos - slot_ids) % window
+    assert k_positions[5] == 5
+    assert all(int(k_positions[i]) == i for i in range(6))
+    assert int(k_positions[6]) < 0 and int(k_positions[7]) < 0
+
+
+def ssd_naive(xh, dt, a_log, b_mat, c_mat, d_skip):
+    """Per-token oracle recurrence for the SSD scan."""
+    bsz, s, h, p = xh.shape
+    n = b_mat.shape[-1]
+    a = -np.exp(np.asarray(a_log))
+    state = np.zeros((bsz, h, p, n), np.float32)
+    ys = np.zeros((bsz, s, h, p), np.float32)
+    xh, dt = np.asarray(xh, np.float64), np.asarray(dt, np.float64)
+    b_mat, c_mat = np.asarray(b_mat, np.float64), np.asarray(c_mat, np.float64)
+    for t in range(s):
+        decay = np.exp(dt[:, t] * a)                        # [B,H]
+        upd = np.einsum("bh,bhp,bn->bhpn", dt[:, t], xh[:, t], b_mat[:, t])
+        state = state * decay[..., None, None] + upd
+        ys[:, t] = np.einsum("bhpn,bn->bhp", state, c_mat[:, t])
+        ys[:, t] += np.asarray(d_skip)[None, :, None] * xh[:, t]
+    return ys
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+def test_ssd_chunked_matches_naive(chunk):
+    rng = np.random.default_rng(3)
+    bsz, s, h, p, n = 2, 32, 3, 8, 4
+    xh = jnp.asarray(rng.normal(size=(bsz, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.5, size=(bsz, s, h)), jnp.float32)
+    a_log = jnp.asarray(rng.uniform(-1, 0.5, size=(h,)), jnp.float32)
+    b_mat = jnp.asarray(rng.normal(size=(bsz, s, n)), jnp.float32)
+    c_mat = jnp.asarray(rng.normal(size=(bsz, s, n)), jnp.float32)
+    d_skip = jnp.asarray(rng.normal(size=(h,)), jnp.float32)
+    y, _ = ssm.ssd_chunked(xh, dt, a_log, b_mat, c_mat, d_skip, chunk=chunk)
+    ref = ssd_naive(xh, dt, a_log, b_mat, c_mat, d_skip)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_decode_matches_prefill():
+    """Running decode_ssm token by token must reproduce apply_ssm."""
+    cfg = ModelConfig(name="t", family="ssm", n_layers=1, d_model=32, d_ff=0,
+                      ssm_state=8, ssm_expand=2, ssm_d_head=8, ssm_chunk=8,
+                      rope_theta=0.0)
+    rng = np.random.default_rng(4)
+    params = ssm.init_ssm(jax.random.key(0), cfg)
+    b, s = 2, 16
+    x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.float32)
+    full = ssm.apply_ssm(params, x, cfg)
+    cache = ssm.init_ssm_cache(cfg, b)
+    outs = []
+    for t in range(s):
+        y, cache = ssm.decode_ssm(params, x[:, t:t + 1], cache, cfg)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(step), np.asarray(full),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE dot products depend only on relative offsets."""
+    rng = np.random.default_rng(5)
+    d = 16
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, d)), jnp.float32)
+
+    def score(pq, pk):
+        qr = layers.apply_rope(q, jnp.array([[[pq]]]), 1e4)
+        kr = layers.apply_rope(k, jnp.array([[[pk]]]), 1e4)
+        return float(jnp.sum(qr * kr))
+
+    assert score(3, 1) == pytest.approx(score(13, 11), rel=1e-5)
+    assert score(7, 0) == pytest.approx(score(107, 100), rel=1e-4)

@@ -1,0 +1,53 @@
+"""Tests for the TPU-side runahead tooling: the Algorithm-1 VMEM allocator
+and the int8 KV-cache decode path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.runahead import allocate
+from repro.models import api
+
+
+def test_vmem_allocator_prefers_reusable_streams():
+    rng = np.random.default_rng(0)
+    hot = rng.integers(0, 32, 4000)          # fits in one tile -> high reuse
+    cold = rng.integers(0, 1 << 14, 4000)    # no locality
+    plan = allocate({"hot": hot, "cold": cold}, budget_tiles=8,
+                    row_bytes={"hot": 512, "cold": 512})
+    by_name = {s.name: s for s in plan.streams}
+    assert by_name["hot"].hit_rate > 0.9
+    assert sum(s.tiles for s in plan.streams) <= 8
+    assert by_name["cold"].tiles >= by_name["hot"].tiles
+    assert plan.depth >= 2
+
+
+def test_vmem_allocator_respects_budget_zero():
+    plan = allocate({"a": np.arange(100)}, budget_tiles=0)
+    assert all(s.tiles == 0 for s in plan.streams)
+
+
+@pytest.mark.parametrize("arch", ["phi3-medium-14b", "h2o-danube-1.8b"])
+def test_kv_quant_decode_close_to_fp(arch):
+    cfg = registry.smoke(arch)
+    cfgq = dataclasses.replace(cfg, kv_quant=True)
+    rng = np.random.default_rng(1)
+    params = api.init_params(jax.random.key(0), cfg)
+    b, s = 2, 64
+    cache = api.init_cache(cfg, b, s)
+    cacheq = api.init_cache(cfgq, b, s)
+    # int8 cache is half the bytes of the bf16 cache (plus small scales)
+    bytes_fp = sum(x.size * x.dtype.itemsize
+                   for x in jax.tree.leaves(cache) if x.ndim == 5)
+    bytes_q = sum(x.size * x.dtype.itemsize
+                  for x in jax.tree.leaves(cacheq) if x.ndim == 5)
+    assert bytes_q == bytes_fp // 2
+    for i in range(4):
+        t = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, 1)), jnp.int32)
+        lo, cache = api.decode(params, t, cache, cfg)
+        loq, cacheq = api.decode(params, t, cacheq, cfgq)
+        err = float(jnp.max(jnp.abs(lo - loq)) / jnp.max(jnp.abs(lo)))
+        assert err < 0.05, (arch, i, err)
