@@ -1,18 +1,26 @@
-"""Shared benchmark plumbing: memoized traces/simulations + CSV emission.
+"""Shared benchmark plumbing: sweep-engine-backed simulation + CSV emission.
 
 Every benchmark prints ``name,us_per_call,derived`` rows.  For the CGRA
 simulator benchmarks, ``us_per_call`` is the *simulated* kernel time at the
 paper's 704 MHz HyCUBE clock (cycles / 704); ``derived`` carries the
 headline metric for that figure (speedup / utilization / rate).
+
+All simulation goes through :mod:`repro.core.cgra.sweep`: figure drivers
+declare their (kernel, SimConfig) points, :func:`warm` runs the uncached
+ones in parallel worker processes and persists every result to
+``artifacts/simcache/``, and :func:`sim` then serves per-point statistics
+from the in-process memo.  A warm simcache makes ``python -m
+benchmarks.run`` cache-incremental: only points whose kernel/config/source
+changed are re-simulated.
 """
 from __future__ import annotations
 
 import functools
 import os
-import sys
 
-from repro.core.cgra import KERNELS, SimConfig, Stats, presets, simulate
-from repro.core.cgra.trace import Trace
+from repro.core.cgra import SimConfig, Stats
+from repro.core.cgra import sweep as sweep_engine
+from repro.core.cgra.trace import KERNELS, Trace
 
 MHZ = 704.0  # HyCUBE clock (Table 3)
 
@@ -26,15 +34,55 @@ PAPER_KERNELS = [
 if QUICK:
     PAPER_KERNELS = ["gcn_cora", "grad", "radix_hist", "rgb"]
 
+#: process-wide result store (``REPRO_SIMCACHE`` overrides the location)
+STORE = sweep_engine.SimCache()
+
+_stats: dict[tuple[str, SimConfig], Stats] = {}
+_meta: dict[str, dict] = {}
+
+
+def warm(points) -> None:
+    """Ensure every (kernel-name, SimConfig) point is simulated + memoized.
+
+    Uncached points run in one parallel sweep; cached ones are read from
+    ``artifacts/simcache``.  Figure drivers call this with their full point
+    list before emitting rows, so a driver is one batched sweep rather than
+    a sequence of blocking ``simulate`` calls.
+    """
+    todo = [p for p in dict.fromkeys(points) if p not in _stats]
+    if not todo:
+        return
+    for r in sweep_engine.sweep(todo, store=STORE):
+        name, cfg = r.point
+        _stats[(name, cfg)] = r.stats
+        _meta[name] = r.trace_meta
+
+
+def sim(name: str, cfg: SimConfig) -> Stats:
+    """Stats for one point (served from the warm memo / simcache)."""
+    key = (name, cfg)
+    if key not in _stats:
+        warm([key])
+    return _stats[key]
+
+
+def trace_meta(name: str) -> dict:
+    """Static trace facts (n_accesses, irregular_fraction, footprint, ...)
+    without building the trace when any simulation of it is cached."""
+    if name not in _meta:
+        _meta[name] = sweep_engine.trace_meta(trace(name))
+    return _meta[name]
+
+
+def reconfig(name: str, cfg: SimConfig, *, window: int | None = 16_384):
+    """Cached §3.4 reconfiguration through the sweep-engine store."""
+    return sweep_engine.reconfigure_cached(name, cfg, window=window,
+                                           store=STORE)
+
 
 @functools.lru_cache(maxsize=None)
 def trace(name: str) -> Trace:
     return KERNELS[name]()
-
-
-@functools.lru_cache(maxsize=None)
-def sim(name: str, cfg: SimConfig) -> Stats:
-    return simulate(trace(name), cfg)
 
 
 def row(name: str, cycles_or_us: float, derived: str, *,

@@ -10,8 +10,16 @@ from __future__ import annotations
 from . import common
 from repro.core.cgra import presets
 
+CONFIGS = (presets.SPM_ONLY_133K, presets.CACHE_SPM, presets.RUNAHEAD)
+
+
+def points() -> list:
+    """Sweep axes: every paper kernel x the three Fig. 11 memory systems."""
+    return [(name, cfg) for name in common.PAPER_KERNELS for cfg in CONFIGS]
+
 
 def run() -> dict:
+    common.warm(points())
     speed_cache, speed_ra, dram_drop = [], [], []
     for name in common.PAPER_KERNELS:
         spm = common.sim(name, presets.SPM_ONLY_133K)

@@ -5,7 +5,15 @@ from . import common
 from repro.core.cgra import presets
 
 
+def points() -> list:
+    """Sweep axes: every paper kernel, Cache+SPM vs the same hardware with
+    runahead enabled."""
+    return [(name, cfg) for name in common.PAPER_KERNELS
+            for cfg in (presets.CACHE_SPM, presets.RUNAHEAD)]
+
+
 def run() -> dict:
+    common.warm(points())
     speedups = []
     for name in common.PAPER_KERNELS:
         cache = common.sim(name, presets.CACHE_SPM)

@@ -9,13 +9,25 @@ from repro.core.cgra import presets
 KERNELS = common.PAPER_KERNELS[:4] if not common.QUICK else \
     common.PAPER_KERNELS[:2]
 
+MSHRS = (1, 2, 4, 8, 16, 32)
+
+
+def points() -> list:
+    """Sweep axes: the Fig. 14 kernels x (Cache+SPM baseline + runahead with
+    each MSHR size)."""
+    pts = [(name, presets.CACHE_SPM) for name in KERNELS]
+    pts += [(name, dataclasses.replace(presets.RUNAHEAD, mshr=m))
+            for name in KERNELS for m in MSHRS]
+    return pts
+
 
 def run() -> dict:
+    common.warm(points())
     sat = {}
     for name in KERNELS:
         base = common.sim(name, presets.CACHE_SPM)
         prev = None
-        for mshr in (1, 2, 4, 8, 16, 32):
+        for mshr in MSHRS:
             cfg = dataclasses.replace(presets.RUNAHEAD, mshr=mshr)
             s = common.sim(name, cfg)
             sp = base.cycles / s.cycles

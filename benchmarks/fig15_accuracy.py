@@ -6,7 +6,13 @@ from . import common
 from repro.core.cgra import presets
 
 
+def points() -> list:
+    """Sweep axes: every paper kernel under the runahead configuration."""
+    return [(name, presets.RUNAHEAD) for name in common.PAPER_KERNELS]
+
+
 def run() -> dict:
+    common.warm(points())
     accs = []
     for name in common.PAPER_KERNELS:
         s = common.sim(name, presets.RUNAHEAD)

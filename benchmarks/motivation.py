@@ -9,15 +9,21 @@ from . import common
 from repro.core.cgra import presets
 
 
+def points() -> list:
+    """Sweep axes: every paper kernel on the Fig. 2 SPM-only 4K system."""
+    return [(name, presets.SPM_ONLY_4K) for name in common.PAPER_KERNELS]
+
+
 def run() -> dict:
+    common.warm(points())
     utils = []
     for name in common.PAPER_KERNELS:
-        tr = common.trace(name)
         s = common.sim(name, presets.SPM_ONLY_4K)
+        irregular = common.trace_meta(name)["irregular_fraction"]
         utils.append(s.utilization)
         common.row(
             f"fig2_spm_only_4k/{name}", s.cycles,
-            f"util={s.utilization:.3%};irregular={tr.irregular_fraction:.2f}")
+            f"util={s.utilization:.3%};irregular={irregular:.2f}")
     avg = sum(utils) / len(utils)
     common.row("fig2_spm_only_4k/avg_utilization", 0,
                f"util={avg:.3%};paper=1.43-1.7%", cycles=False)

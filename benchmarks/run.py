@@ -4,6 +4,16 @@ Prints ``name,us_per_call,derived`` CSV.  For CGRA-simulator rows,
 ``us_per_call`` is simulated kernel time at the 704 MHz HyCUBE clock; the
 roofline rows report modeled step time from the dry-run artifacts.  Set
 REPRO_BENCH_QUICK=1 for a fast subset.
+
+Execution model: every figure driver declares its (kernel, SimConfig) sweep
+points, and this driver warms them all through the sweep engine in ONE
+parallel batch before any figure emits a row.  Results persist in
+``artifacts/simcache/``, so a re-run only simulates points whose kernel,
+configuration, or simulator source changed (cache-warm-incremental).
+
+The Pallas kernel microbenchmarks and the roofline pass are imported lazily
+*after* the sweep so the warm phase — and its forked worker processes —
+stays JAX-free.
 """
 from __future__ import annotations
 
@@ -11,17 +21,33 @@ import json
 import pathlib
 import time
 
-from . import (fig11_exec_time, fig12_cache_sweeps, fig13_runahead,
+from . import (common, fig11_exec_time, fig12_cache_sweeps, fig13_runahead,
                fig14_mshr, fig15_accuracy, fig16_coverage, fig17_reconfig,
-               kernels_bench, motivation, roofline)
+               motivation)
 
 SUMMARY = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench_summary.json"
+
+FIGURES = (motivation, fig11_exec_time, fig12_cache_sweeps, fig13_runahead,
+           fig14_mshr, fig15_accuracy, fig16_coverage, fig17_reconfig)
+
+
+def sweep_points() -> list:
+    """Union of every figure driver's declared sweep points."""
+    pts = []
+    for mod in FIGURES:
+        pts += mod.points()
+    return list(dict.fromkeys(pts))
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
-    summary = {}
+    from repro.core.cgra import sweep as sweep_engine
+    sweep_engine.ensure_pool()   # fork workers while this process is JAX-free
+    pts = sweep_points()
+    common.warm(pts)
+    summary = {"sweep_points": len(pts),
+               "sweep_seconds": time.time() - t0}
     summary["motivation"] = motivation.run()
     summary["fig11"] = fig11_exec_time.run()
     summary["fig12"] = fig12_cache_sweeps.run()
@@ -30,6 +56,8 @@ def main() -> None:
     summary["fig15"] = fig15_accuracy.run()
     summary["fig16"] = fig16_coverage.run()
     summary["fig17"] = fig17_reconfig.run()
+
+    from . import kernels_bench, roofline  # JAX-heavy: import after the sweep
     kernels_bench.run()
     rows = roofline.run()
     summary["roofline_cells"] = len(rows)

@@ -5,10 +5,11 @@ from .trace import (KERNELS, RANDOM_DATA_KERNELS, REAL_DATA_KERNELS, Array,
                     Trace, gcn_aggregate, grad, perm_sort, radix_hist,
                     radix_update, random_access, rgb, src2dest)
 from . import presets
+from . import sweep
 
 __all__ = [
     "Cache", "CacheConfig", "OracleCache", "SimConfig", "Stats", "plan_spm",
     "simulate", "KERNELS", "REAL_DATA_KERNELS", "RANDOM_DATA_KERNELS",
     "Array", "Trace", "gcn_aggregate", "grad", "perm_sort", "radix_hist",
-    "radix_update", "random_access", "rgb", "src2dest", "presets",
+    "radix_update", "random_access", "rgb", "src2dest", "presets", "sweep",
 ]

@@ -1,0 +1,335 @@
+"""Cycle-level simulation engine: the stall/runahead walk over trace arrays.
+
+This module is the hot path behind :func:`repro.core.cgra.simulate`.  The
+public `simulator` module owns configuration (:class:`SimConfig`), statistics
+(:class:`Stats`) and orchestration; this module owns the machinery:
+
+* :class:`_DramBus` / :class:`_Mshr` — timing primitives;
+* :class:`_Subsystem` — SPM + multi-L1 + shared L2 + DRAM with prefetch
+  classification;
+* :func:`run` — the per-iteration walk (demand path + runahead walker).
+
+The walk consumes the trace's *precomputed* views (``Trace.as_lists()``,
+``Trace.iter_starts()``, ``Trace.spm_mask()``, ``Trace.cache_index()``) so
+per-access work is plain-``int`` list indexing, and the same-cycle L1
+arbitration penalty (§3.1) is computed for every iteration at once with one
+``bincount`` instead of a per-iteration Python pass.  The cycle-by-cycle
+semantics are bit-identical to the pre-split simulator; `tests/test_sweep.py`
+pins that with golden cycle counts.
+"""
+from __future__ import annotations
+
+import bisect
+
+import numpy as np
+
+from .cache import Cache
+from .trace import Trace
+
+
+class _DramBus:
+    """Fixed-latency DRAM whose return bus transfers ``bytes_per_cycle``:
+    a request for a B-byte line occupies the bus for B/bytes_per_cycle
+    cycles, so back-to-back large-line fills serialize (bandwidth cap)."""
+
+    def __init__(self, latency: int, bytes_per_cycle: int):
+        self.latency = latency
+        self.bytes_per_cycle = max(1, bytes_per_cycle)
+        self._last_return = -10**18
+
+    def request(self, now: int, nbytes: int) -> int:
+        occupancy = max(1, nbytes // self.bytes_per_cycle)
+        ready = max(now + self.latency, self._last_return + occupancy)
+        self._last_return = ready
+        return ready
+
+
+class _Mshr:
+    """Outstanding-fill bookkeeping for one L1 (sorted ready times)."""
+
+    def __init__(self, entries: int):
+        self.entries = entries
+        self.ready: list[int] = []
+
+    def _prune(self, now: int) -> None:
+        i = bisect.bisect_right(self.ready, now)
+        if i:
+            del self.ready[:i]
+
+    def free_at(self, now: int) -> int:
+        """Earliest cycle >= now with a free entry."""
+        self._prune(now)
+        if len(self.ready) < self.entries:
+            return now
+        return self.ready[len(self.ready) - self.entries]
+
+    def occupy(self, ready: int) -> None:
+        bisect.insort(self.ready, ready)
+
+    def has_free(self, now: int) -> bool:
+        self._prune(now)
+        return len(self.ready) < self.entries
+
+
+class _Subsystem:
+    """SPM + multi-L1 + shared L2 + DRAM, with prefetch classification."""
+
+    def __init__(self, cfg, stats):
+        self.cfg = cfg
+        self.stats = stats
+        self.l1s = [Cache(c) for c in cfg.l1_configs()]
+        self.mshrs = [_Mshr(cfg.mshr) for _ in self.l1s]
+        self.l2 = Cache(cfg.l2) if (cfg.l2 is not None and not cfg.spm_only) else None
+        self.bus = _DramBus(cfg.dram_latency, cfg.dram_bus_bytes_per_cycle)
+        # prefetch records: pf_id -> (cache_id, line_addr, issue_trace_idx)
+        self.pf_records: list[tuple[int, int, int]] = []
+        self.pf_outcome: list[str] = []  # "used" | "evicted" | "pending"
+
+    # -- helpers -------------------------------------------------------------
+    def _fill_latency(self, c: int, line_addr: int, now: int) -> int:
+        """Cycle at which a fill for ``line_addr`` (L1 ``c``) completes."""
+        l1 = self.l1s[c]
+        byte_addr = line_addr * l1.cfg.line
+        if self.l2 is not None:
+            e2 = self.l2.probe(self.l2.line_addr(byte_addr))
+            if e2 is not None and e2.ready <= now:
+                self.l2.touch(e2)
+                self.stats.l2_hits += 1
+                return now + self.cfg.l2_hit_latency
+            self.stats.dram_accesses += 1
+            ready = self.bus.request(now, self.l2.cfg.line)
+            self.l2.install(self.l2.line_addr(byte_addr), ready)
+            return ready
+        self.stats.dram_accesses += 1
+        return self.bus.request(now, l1.cfg.line)
+
+    def _note_eviction(self, victim) -> None:
+        if victim is not None and victim.pf_unused and victim.pf_id >= 0:
+            self.pf_outcome[victim.pf_id] = "evicted"
+
+    # -- demand path ----------------------------------------------------------
+    def demand(self, c: int, addr: int, store: bool, now: int,
+               trace_idx: int) -> int:
+        """Execute a demand access at cycle ``now``; returns the cycle at
+        which the CGRA may proceed (== now when there is no stall)."""
+        l1 = self.l1s[c]
+        line = l1.line_addr(addr)
+        e = l1.probe(line)
+        if e is not None:
+            l1.touch(e)
+            if store:
+                e.dirty = True
+            if e.pf_unused:
+                e.pf_unused = False
+                if e.pf_id >= 0:
+                    self.pf_outcome[e.pf_id] = "used"
+                self.stats.prefetch_used += 1
+                self.stats.covered_misses += 1
+            if e.ready > now and not store:
+                # in-flight fill: partial wait (MSHR secondary merge)
+                self.stats.l1_hits += 1
+                return e.ready
+            self.stats.l1_hits += 1
+            return now
+        # miss
+        self.stats.l1_misses += 1
+        mshr = self.mshrs[c]
+        issue = mshr.free_at(now)          # stall here if MSHR exhausted
+        ready = self._fill_latency(c, line, issue)
+        mshr.occupy(ready)
+        victim = l1.install(line, ready)
+        self._note_eviction(victim)
+        ent = l1.probe(line)
+        if store:
+            ent.dirty = True
+            return max(now, issue)          # store buffer absorbs the miss
+        self.stats.uncovered_misses += 1
+        return ready
+
+    def demand_spm_only(self, addr: int, store: bool, now: int) -> int:
+        """SPM-only baseline: every non-SPM access is a word-wide DRAM
+        transaction."""
+        self.stats.dram_accesses += 1
+        ready = self.bus.request(now, 4)
+        if store:
+            return now                      # write buffer
+        return ready
+
+    # -- runahead (prefetch) path ----------------------------------------------
+    def runahead_probe(self, c: int, addr: int, now: int) -> str:
+        """Probe during runahead: 'hit' (value available), 'inflight'
+        (line fetching; value dummy, no prefetch needed), or 'miss'."""
+        l1 = self.l1s[c]
+        e = l1.probe(l1.line_addr(addr))
+        if e is None:
+            return "miss"
+        l1.touch(e)
+        return "hit" if e.ready <= now else "inflight"
+
+    def prefetch(self, c: int, addr: int, now: int, trace_idx: int) -> bool:
+        """Issue a precise prefetch (if an MSHR entry is free)."""
+        mshr = self.mshrs[c]
+        if not mshr.has_free(now):
+            return False
+        l1 = self.l1s[c]
+        line = l1.line_addr(addr)
+        ready = self._fill_latency(c, line, now)
+        mshr.occupy(ready)
+        pf_id = len(self.pf_records)
+        self.pf_records.append((c, line, trace_idx))
+        self.pf_outcome.append("pending")
+        victim = l1.install(line, ready, pf_unused=True, pf_id=pf_id)
+        self._note_eviction(victim)
+        self.stats.prefetch_issued += 1
+        return True
+
+
+def _arbitration_extra(trace: Trace, in_spm: np.ndarray, cache_idx: np.ndarray,
+                       n_caches: int, starts: np.ndarray, ii: int) -> np.ndarray:
+    """Per-iteration arbitration penalty, all iterations at once (§3.1).
+
+    The k-th same-cycle request to one L1 waits k cycles beyond the II's
+    scheduled issue slots, so an iteration pays ``max_c(count_c) - ii`` extra
+    cycles when any single L1 receives more than ``ii`` non-SPM requests.
+    """
+    n_iters = len(starts) - 1
+    sizes = np.diff(starts)
+    if n_iters == 0 or not len(trace):
+        return np.zeros(n_iters, dtype=np.int64)
+    it_of = np.repeat(np.arange(n_iters, dtype=np.int64), sizes)
+    sel = ~in_spm
+    key = it_of[sel] * n_caches + cache_idx[sel]
+    cnt = np.bincount(key, minlength=n_iters * n_caches)
+    per_iter_max = cnt.reshape(n_iters, n_caches).max(axis=1)
+    return np.maximum(0, per_iter_max - ii)
+
+
+def run(trace: Trace, cfg, stats) -> None:
+    """Walk one trace through one configuration, mutating ``stats``."""
+    sub = _Subsystem(cfg, stats)
+    in_spm_arr = trace.spm_mask(cfg.spm_bytes)
+    n = len(trace)
+    pe, addr, is_store, addr_dep, iter_id = trace.as_lists()
+    in_spm = in_spm_arr.tolist()
+    ii = trace.ii
+    n_caches = cfg.n_caches
+    cache_idx_arr = trace.cache_index(n_caches)
+    cache_of = cache_idx_arr.tolist()    # per-access L1 id (indexed by j)
+
+    starts_arr = trace.iter_starts()
+    starts = starts_arr.tolist()
+    n_iters = len(starts) - 1
+    stats.compute_cycles = n_iters * ii
+
+    if cfg.spm_only:
+        extra = [0] * n_iters
+    else:
+        extra = _arbitration_extra(trace, in_spm_arr, cache_idx_arr, n_caches,
+                                   starts_arr, ii).tolist()
+
+    def run_walker(j0: int, now: int, deadline: int, blocked: int) -> None:
+        """Runahead execution during the stall window [now, deadline)."""
+        stats.runahead_entries += 1
+        dummy: set[int] = {blocked}
+        temp: set[int] = set()            # addrs written to temporary storage
+        ra_cycle = now
+        it = iter_id[j0] if j0 < n else -1
+        j = j0
+        while j < n and ra_cycle < deadline:
+            if iter_id[j] != it:
+                ra_cycle += ii
+                it = iter_id[j]
+                if ra_cycle >= deadline:
+                    break
+            dep = addr_dep[j]
+            valid_addr = dep < 0 or dep not in dummy
+            if not valid_addr:
+                if not is_store[j]:
+                    dummy.add(j)          # dummy address -> dummy value
+                j += 1
+                continue
+            a = addr[j]
+            if in_spm[j]:
+                if is_store[j]:
+                    temp.add(a)
+                j += 1
+                continue
+            c = cache_of[j]
+            if is_store[j]:
+                # redirect to temp storage + convert to prefetch-read (§3.2)
+                temp.add(a)
+                if sub.runahead_probe(c, a, ra_cycle) == "miss":
+                    sub.prefetch(c, a, ra_cycle, j)
+                j += 1
+                continue
+            # load
+            if a in temp:
+                j += 1
+                continue
+            outcome = sub.runahead_probe(c, a, ra_cycle)
+            if outcome == "hit":
+                pass
+            elif outcome == "inflight":
+                dummy.add(j)              # data not back yet -> dummy value
+            else:
+                sub.prefetch(c, a, ra_cycle, j)
+                dummy.add(j)
+            j += 1
+
+    spm_only = cfg.spm_only
+    runahead = cfg.runahead and not spm_only
+    demand = sub.demand
+    demand_spm_only = sub.demand_spm_only
+    cycle = 0
+    for t in range(n_iters):
+        s, e = starts[t], starts[t + 1]
+        cycle += ii + extra[t]
+        for j in range(s, e):
+            if in_spm[j]:
+                stats.spm_accesses += 1
+                continue
+            a = addr[j]
+            st = is_store[j]
+            if spm_only:
+                ready = demand_spm_only(a, st, cycle)
+            else:
+                ready = demand(cache_of[j], a, st, cycle, j)
+            if ready > cycle:
+                if runahead:
+                    run_walker(j + 1, cycle, ready, j)
+                stats.stall_cycles += ready - cycle
+                cycle = ready
+    stats.cycles = cycle
+
+    _classify_prefetches(trace, sub, stats)
+
+
+def _classify_prefetches(trace: Trace, sub: _Subsystem, stats) -> None:
+    """Fig. 15 classification: used / evicted (useful, lost) / useless."""
+    if not sub.pf_records:
+        return
+    # lines demanded after a given trace index, per cache
+    per_cache_lines: dict[int, dict[int, np.ndarray]] = {}
+    for c, l1 in enumerate(sub.l1s):
+        addrs = trace.addr // l1.cfg.line
+        mask = (trace.pe.astype(np.int64) % sub.cfg.n_caches) == c
+        idxs = np.flatnonzero(mask)
+        lines: dict[int, list[int]] = {}
+        for i in idxs:
+            lines.setdefault(int(addrs[i]), []).append(int(i))
+        per_cache_lines[c] = {k: np.asarray(v) for k, v in lines.items()}
+
+    for pf_id, (c, line, issue_idx) in enumerate(sub.pf_records):
+        outcome = sub.pf_outcome[pf_id]
+        if outcome == "used":
+            continue
+        future = per_cache_lines[c].get(line)
+        needed = future is not None and bool(np.any(future > issue_idx))
+        if outcome == "evicted" and needed:
+            stats.prefetch_evicted += 1
+        elif outcome == "pending" and needed:
+            # resident at end but the demand re-executed before the fill is
+            # also counted used via partial wait; remaining = end-of-kernel
+            stats.prefetch_evicted += 1
+        else:
+            stats.prefetch_useless += 1

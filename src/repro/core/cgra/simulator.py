@@ -19,16 +19,22 @@ Models the paper's system (§3, Table 3):
 Timing constants default to Table 3: L1 hit 1 cycle (pipelined into the II),
 L2 hit 8, L2 miss (DRAM) 80, DRAM bus service interval models the bandwidth
 pressure the paper mentions for large lines (§4.3).
+
+This module is the *orchestration* layer: configuration (:class:`SimConfig`),
+result statistics (:class:`Stats`), and the :func:`simulate` entry point.
+The stall/runahead walk itself lives in :mod:`repro.core.cgra._engine` and
+operates on the trace's precomputed array views; batch/parallel/cached
+execution over many (trace, config) points lives in
+:mod:`repro.core.cgra.sweep`.
 """
 from __future__ import annotations
 
-import bisect
 import dataclasses
 
-import numpy as np
+from .cache import CacheConfig
+from .trace import Trace, plan_spm
 
-from .cache import Cache, CacheConfig
-from .trace import Trace
+__all__ = ["SimConfig", "Stats", "plan_spm", "simulate"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,327 +112,19 @@ class Stats:
             return 1.0
         return (self.prefetch_used + self.prefetch_evicted) / self.prefetch_issued
 
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
 
-class _DramBus:
-    """Fixed-latency DRAM whose return bus transfers ``bytes_per_cycle``:
-    a request for a B-byte line occupies the bus for B/bytes_per_cycle
-    cycles, so back-to-back large-line fills serialize (bandwidth cap)."""
-
-    def __init__(self, latency: int, bytes_per_cycle: int):
-        self.latency = latency
-        self.bytes_per_cycle = max(1, bytes_per_cycle)
-        self._last_return = -10**18
-
-    def request(self, now: int, nbytes: int) -> int:
-        occupancy = max(1, nbytes // self.bytes_per_cycle)
-        ready = max(now + self.latency, self._last_return + occupancy)
-        self._last_return = ready
-        return ready
-
-
-class _Mshr:
-    """Outstanding-fill bookkeeping for one L1 (sorted ready times)."""
-
-    def __init__(self, entries: int):
-        self.entries = entries
-        self.ready: list[int] = []
-
-    def _prune(self, now: int) -> None:
-        i = bisect.bisect_right(self.ready, now)
-        if i:
-            del self.ready[:i]
-
-    def free_at(self, now: int) -> int:
-        """Earliest cycle >= now with a free entry."""
-        self._prune(now)
-        if len(self.ready) < self.entries:
-            return now
-        return self.ready[len(self.ready) - self.entries]
-
-    def occupy(self, ready: int) -> None:
-        bisect.insort(self.ready, ready)
-
-    def has_free(self, now: int) -> bool:
-        self._prune(now)
-        return len(self.ready) < self.entries
-
-
-def plan_spm(trace: Trace, spm_bytes: int) -> np.ndarray:
-    """Compile-time SPM allocation: pin array prefixes greedily by access
-    density (accesses per byte).  Returns a per-access ``in_spm`` mask."""
-    if spm_bytes <= 0:
-        return np.zeros(len(trace), dtype=bool)
-    arrays = list(trace.arrays.values())
-    counts = {a.name: 0 for a in arrays}
-    bases = np.array([a.base for a in arrays], dtype=np.int64)
-    order = np.argsort(bases)
-    sorted_bases = bases[order]
-    which = np.searchsorted(sorted_bases, trace.addr, side="right") - 1
-    cnt = np.bincount(which, minlength=len(arrays))
-    for k, a_idx in enumerate(order):
-        counts[arrays[a_idx].name] = int(cnt[k])
-
-    remaining = spm_bytes
-    pinned: list[tuple[int, int]] = []
-    for a in sorted(arrays, key=lambda a: counts[a.name] / max(1, a.size),
-                    reverse=True):
-        if remaining <= 0:
-            break
-        take = min(a.size, remaining)
-        pinned.append((a.base, a.base + take))
-        remaining -= take
-
-    mask = np.zeros(len(trace), dtype=bool)
-    for lo, hi in pinned:
-        mask |= (trace.addr >= lo) & (trace.addr < hi)
-    return mask
-
-
-class _Subsystem:
-    """SPM + multi-L1 + shared L2 + DRAM, with prefetch classification."""
-
-    def __init__(self, cfg: SimConfig, stats: Stats):
-        self.cfg = cfg
-        self.stats = stats
-        self.l1s = [Cache(c) for c in cfg.l1_configs()]
-        self.mshrs = [_Mshr(cfg.mshr) for _ in self.l1s]
-        self.l2 = Cache(cfg.l2) if (cfg.l2 is not None and not cfg.spm_only) else None
-        self.bus = _DramBus(cfg.dram_latency, cfg.dram_bus_bytes_per_cycle)
-        # prefetch records: pf_id -> (cache_id, line_addr, issue_trace_idx)
-        self.pf_records: list[tuple[int, int, int]] = []
-        self.pf_outcome: list[str] = []  # "used" | "evicted" | "pending"
-
-    # -- helpers -------------------------------------------------------------
-    def _fill_latency(self, c: int, line_addr: int, now: int) -> int:
-        """Cycle at which a fill for ``line_addr`` (L1 ``c``) completes."""
-        l1 = self.l1s[c]
-        byte_addr = line_addr * l1.cfg.line
-        if self.l2 is not None:
-            e2 = self.l2.probe(self.l2.line_addr(byte_addr))
-            if e2 is not None and e2.ready <= now:
-                self.l2.touch(e2)
-                self.stats.l2_hits += 1
-                return now + self.cfg.l2_hit_latency
-            self.stats.dram_accesses += 1
-            ready = self.bus.request(now, self.l2.cfg.line)
-            self.l2.install(self.l2.line_addr(byte_addr), ready)
-            return ready
-        self.stats.dram_accesses += 1
-        return self.bus.request(now, l1.cfg.line)
-
-    def _note_eviction(self, victim) -> None:
-        if victim is not None and victim.pf_unused and victim.pf_id >= 0:
-            self.pf_outcome[victim.pf_id] = "evicted"
-
-    # -- demand path ----------------------------------------------------------
-    def demand(self, c: int, addr: int, store: bool, now: int,
-               trace_idx: int) -> int:
-        """Execute a demand access at cycle ``now``; returns the cycle at
-        which the CGRA may proceed (== now when there is no stall)."""
-        l1 = self.l1s[c]
-        line = l1.line_addr(addr)
-        e = l1.probe(line)
-        if e is not None:
-            l1.touch(e)
-            if store:
-                e.dirty = True
-            if e.pf_unused:
-                e.pf_unused = False
-                if e.pf_id >= 0:
-                    self.pf_outcome[e.pf_id] = "used"
-                self.stats.prefetch_used += 1
-                self.stats.covered_misses += 1
-            if e.ready > now and not store:
-                # in-flight fill: partial wait (MSHR secondary merge)
-                self.stats.l1_hits += 1
-                return e.ready
-            self.stats.l1_hits += 1
-            return now
-        # miss
-        self.stats.l1_misses += 1
-        mshr = self.mshrs[c]
-        issue = mshr.free_at(now)          # stall here if MSHR exhausted
-        ready = self._fill_latency(c, line, issue)
-        mshr.occupy(ready)
-        victim = l1.install(line, ready)
-        self._note_eviction(victim)
-        ent = l1.probe(line)
-        if store:
-            ent.dirty = True
-            return max(now, issue)          # store buffer absorbs the miss
-        self.stats.uncovered_misses += 1
-        return ready
-
-    def demand_spm_only(self, addr: int, store: bool, now: int) -> int:
-        """SPM-only baseline: every non-SPM access is a word-wide DRAM
-        transaction."""
-        self.stats.dram_accesses += 1
-        ready = self.bus.request(now, 4)
-        if store:
-            return now                      # write buffer
-        return ready
-
-    # -- runahead (prefetch) path ----------------------------------------------
-    def runahead_probe(self, c: int, addr: int, now: int) -> str:
-        """Probe during runahead: 'hit' (value available), 'inflight'
-        (line fetching; value dummy, no prefetch needed), or 'miss'."""
-        l1 = self.l1s[c]
-        e = l1.probe(l1.line_addr(addr))
-        if e is None:
-            return "miss"
-        l1.touch(e)
-        return "hit" if e.ready <= now else "inflight"
-
-    def prefetch(self, c: int, addr: int, now: int, trace_idx: int) -> bool:
-        """Issue a precise prefetch (if an MSHR entry is free)."""
-        mshr = self.mshrs[c]
-        if not mshr.has_free(now):
-            return False
-        l1 = self.l1s[c]
-        line = l1.line_addr(addr)
-        ready = self._fill_latency(c, line, now)
-        mshr.occupy(ready)
-        pf_id = len(self.pf_records)
-        self.pf_records.append((c, line, trace_idx))
-        self.pf_outcome.append("pending")
-        victim = l1.install(line, ready, pf_unused=True, pf_id=pf_id)
-        self._note_eviction(victim)
-        self.stats.prefetch_issued += 1
-        return True
+    @classmethod
+    def from_dict(cls, d: dict) -> "Stats":
+        names = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in names})
 
 
 def simulate(trace: Trace, cfg: SimConfig) -> Stats:
     """Run one kernel trace through one hardware configuration."""
+    from . import _engine
+
     stats = Stats(name=trace.name)
-    sub = _Subsystem(cfg, stats)
-    in_spm = plan_spm(trace, cfg.spm_bytes)
-    n = len(trace)
-    pe = trace.pe
-    addr = trace.addr
-    is_store = trace.is_store
-    addr_dep = trace.addr_dep
-    iter_id = trace.iter_id
-    ii = trace.ii
-    n_caches = cfg.n_caches
-    cache_of = [p % n_caches for p in range(int(pe.max()) + 1 if n else 1)]
-
-    # iteration boundaries (iter_id is non-decreasing)
-    starts = np.flatnonzero(np.r_[True, np.diff(iter_id) != 0])
-    starts = np.r_[starts, n]
-    n_iters = len(starts) - 1
-    stats.compute_cycles = n_iters * ii
-
-    def arb_extra(s: int, e: int) -> int:
-        """Arbitration: the k-th same-cycle request to one L1 waits k cycles
-        beyond the II's scheduled issue slots (§3.1)."""
-        if e - s <= ii:
-            return 0
-        cnt = [0] * n_caches
-        for j in range(s, e):
-            if not in_spm[j]:
-                cnt[cache_of[pe[j]]] += 1
-        return max(0, max(cnt, default=0) - ii)
-
-    def run_walker(j0: int, now: int, deadline: int, blocked: int) -> None:
-        """Runahead execution during the stall window [now, deadline)."""
-        stats.runahead_entries += 1
-        dummy: set[int] = {blocked}
-        temp: set[int] = set()            # addrs written to temporary storage
-        ra_cycle = now
-        it = int(iter_id[j0]) if j0 < n else -1
-        j = j0
-        while j < n and ra_cycle < deadline:
-            if iter_id[j] != it:
-                ra_cycle += ii
-                it = int(iter_id[j])
-                if ra_cycle >= deadline:
-                    break
-            dep = int(addr_dep[j])
-            valid_addr = dep < 0 or dep not in dummy
-            if not valid_addr:
-                if not is_store[j]:
-                    dummy.add(j)          # dummy address -> dummy value
-                j += 1
-                continue
-            a = int(addr[j])
-            if in_spm[j]:
-                if is_store[j]:
-                    temp.add(a)
-                j += 1
-                continue
-            c = cache_of[pe[j]]
-            if is_store[j]:
-                # redirect to temp storage + convert to prefetch-read (§3.2)
-                temp.add(a)
-                if sub.runahead_probe(c, a, ra_cycle) == "miss":
-                    sub.prefetch(c, a, ra_cycle, j)
-                j += 1
-                continue
-            # load
-            if a in temp:
-                j += 1
-                continue
-            outcome = sub.runahead_probe(c, a, ra_cycle)
-            if outcome == "hit":
-                pass
-            elif outcome == "inflight":
-                dummy.add(j)              # data not back yet -> dummy value
-            else:
-                sub.prefetch(c, a, ra_cycle, j)
-                dummy.add(j)
-            j += 1
-
-    cycle = 0
-    for t in range(n_iters):
-        s, e = int(starts[t]), int(starts[t + 1])
-        cycle += ii + (arb_extra(s, e) if not cfg.spm_only else 0)
-        for j in range(s, e):
-            if in_spm[j]:
-                stats.spm_accesses += 1
-                continue
-            a = int(addr[j])
-            st = bool(is_store[j])
-            if cfg.spm_only:
-                ready = sub.demand_spm_only(a, st, cycle)
-            else:
-                ready = sub.demand(cache_of[pe[j]], a, st, cycle, j)
-            if ready > cycle:
-                if cfg.runahead and not cfg.spm_only:
-                    run_walker(j + 1, cycle, ready, j)
-                stats.stall_cycles += ready - cycle
-                cycle = ready
-    stats.cycles = cycle
-
-    _classify_prefetches(trace, sub, stats)
+    _engine.run(trace, cfg, stats)
     return stats
-
-
-def _classify_prefetches(trace: Trace, sub: _Subsystem, stats: Stats) -> None:
-    """Fig. 15 classification: used / evicted (useful, lost) / useless."""
-    if not sub.pf_records:
-        return
-    # lines demanded after a given trace index, per cache
-    per_cache_lines: dict[int, dict[int, np.ndarray]] = {}
-    for c, l1 in enumerate(sub.l1s):
-        addrs = trace.addr // l1.cfg.line
-        mask = (trace.pe.astype(np.int64) % sub.cfg.n_caches) == c
-        idxs = np.flatnonzero(mask)
-        lines: dict[int, list[int]] = {}
-        for i in idxs:
-            lines.setdefault(int(addrs[i]), []).append(int(i))
-        per_cache_lines[c] = {k: np.asarray(v) for k, v in lines.items()}
-
-    for pf_id, (c, line, issue_idx) in enumerate(sub.pf_records):
-        outcome = sub.pf_outcome[pf_id]
-        if outcome == "used":
-            continue
-        future = per_cache_lines[c].get(line)
-        needed = future is not None and bool(np.any(future > issue_idx))
-        if outcome == "evicted" and needed:
-            stats.prefetch_evicted += 1
-        elif outcome == "pending" and needed:
-            # resident at end but the demand re-executed before the fill is
-            # also counted used via partial wait; remaining = end-of-kernel
-            stats.prefetch_evicted += 1
-        else:
-            stats.prefetch_useless += 1

@@ -1,0 +1,481 @@
+"""Parallel, content-addressed sweep engine for the cycle-level simulator.
+
+Every paper figure is a sweep of (kernel trace x :class:`SimConfig`) points.
+This module turns that into a first-class operation:
+
+* **Points are content-addressed.**  A point's key is the SHA-256 of its
+  canonicalized trace spec + config JSON + a digest of the simulator source
+  files, so editing `_engine.py`/`cache.py`/`trace.py` (or bumping the record
+  schema) automatically invalidates every cached result — stale entries
+  simply become unreachable and :meth:`SimCache.prune_stale` deletes them.
+* **Results persist** in ``artifacts/simcache/<key[:2]>/<key>.json`` with a
+  human-readable ``index.json`` summarizing what is cached.
+* **Uncached points run in parallel** across worker processes
+  (``concurrent.futures``, spawn context, worker count auto-detected), with a
+  per-process trace memo so a sweep of N configs over one kernel builds the
+  trace once per worker, not N times.
+
+Trace specs are picklable descriptions, never `Trace` objects:
+
+* ``"gcn_cora"`` — a name in :data:`repro.core.cgra.trace.KERNELS`;
+* ``("gcn_aggregate", {"dataset": "cora", "max_edges": 800})`` — a public
+  factory in :mod:`repro.core.cgra.trace` plus kwargs.
+
+Typical use (this is what ``benchmarks/common.py`` does)::
+
+    from repro.core.cgra import sweep
+    results = sweep.sweep([(name, cfg) for name in kernels for cfg in cfgs])
+    cycles = {r.point: r.stats.cycles for r in results}
+
+§3.4 reconfiguration results are cached through the same store (kind
+``"reconfig"``) via :func:`reconfigure_cached`; those always run inline in
+the calling process because the profiler is JAX-based and must not be forked
+or re-imported per worker.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import multiprocessing
+import os
+import pathlib
+import sys
+import tempfile
+from concurrent.futures import ProcessPoolExecutor
+
+from . import trace as trace_mod
+from .cache import CacheConfig
+from .simulator import SimConfig, Stats, simulate
+from .trace import Trace
+
+SCHEMA_VERSION = 1
+
+#: source files whose content participates in every cache key; editing any of
+#: them invalidates all previously stored results.  This module itself is
+#: deliberately NOT digested: everything in it that affects stored content
+#: flows into the key payload directly (spec/config canonicalization) or is
+#: covered by SCHEMA_VERSION (record shape), so orchestration-only edits —
+#: pool sizing, CLI — keep the store warm.
+_SRC_FILES = ("cache.py", "trace.py", "simulator.py", "_engine.py",
+              "jaxcache.py", "reconfig.py")
+
+DEFAULT_ROOT = pathlib.Path(__file__).resolve().parents[4] / "artifacts" / "simcache"
+
+_digest_memo: str | None = None
+
+
+def code_digest() -> str:
+    """Digest of the simulator source tree (the invalidation token)."""
+    global _digest_memo
+    if _digest_memo is None:
+        h = hashlib.sha256()
+        here = pathlib.Path(__file__).resolve().parent
+        for fname in _SRC_FILES:
+            h.update(fname.encode())
+            h.update((here / fname).read_bytes())
+        _digest_memo = h.hexdigest()[:16]
+    return _digest_memo
+
+
+# ---------------------------------------------------------------------------
+# Canonical JSON forms (trace specs + SimConfig)
+# ---------------------------------------------------------------------------
+
+TraceSpec = "str | tuple[str, dict]"
+
+
+def normalize_spec(spec) -> dict:
+    """Canonical JSON form of a trace spec (also validates it)."""
+    if isinstance(spec, str):
+        if spec not in trace_mod.KERNELS:
+            raise KeyError(f"unknown kernel {spec!r}; see trace.KERNELS")
+        return {"kernel": spec}
+    if isinstance(spec, (tuple, list)) and len(spec) == 2:
+        factory, kwargs = str(spec[0]), spec[1]
+        fn = getattr(trace_mod, factory, None)
+        if factory.startswith("_") or not callable(fn):
+            raise KeyError(f"unknown trace factory {factory!r}")
+        return {"factory": factory, "kwargs": dict(kwargs)}
+    raise TypeError(f"bad trace spec {spec!r}: want name or (factory, kwargs)")
+
+
+def spec_label(spec_json: dict) -> str:
+    if "kernel" in spec_json:
+        return spec_json["kernel"]
+    kw = ",".join(f"{k}={v}" for k, v in sorted(spec_json["kwargs"].items()))
+    return f"{spec_json['factory']}({kw})"
+
+
+def build_trace(spec_json: dict) -> Trace:
+    if "kernel" in spec_json:
+        return trace_mod.KERNELS[spec_json["kernel"]]()
+    return getattr(trace_mod, spec_json["factory"])(**spec_json["kwargs"])
+
+
+def _cache_cfg_to_json(c: CacheConfig | None):
+    if c is None:
+        return None
+    return {"ways": c.ways, "line": c.line, "way_bytes": c.way_bytes}
+
+
+def _cache_cfg_from_json(d) -> CacheConfig | None:
+    return None if d is None else CacheConfig(**d)
+
+
+def cfg_to_json(cfg: SimConfig) -> dict:
+    d = {f.name: getattr(cfg, f.name) for f in dataclasses.fields(SimConfig)}
+    d["l1"] = _cache_cfg_to_json(cfg.l1)
+    d["l2"] = _cache_cfg_to_json(cfg.l2)
+    d["l1_per_cache"] = (None if cfg.l1_per_cache is None else
+                         [_cache_cfg_to_json(c) for c in cfg.l1_per_cache])
+    return d
+
+
+def cfg_from_json(d: dict) -> SimConfig:
+    d = dict(d)
+    d["l1"] = _cache_cfg_from_json(d["l1"])
+    d["l2"] = _cache_cfg_from_json(d["l2"])
+    if d["l1_per_cache"] is not None:
+        d["l1_per_cache"] = tuple(_cache_cfg_from_json(c)
+                                  for c in d["l1_per_cache"])
+    return SimConfig(**d)
+
+
+def point_key(spec_json: dict, cfg: SimConfig, kind: str = "sim",
+              extra: dict | None = None) -> str:
+    """Content key of one sweep point (includes the source digest)."""
+    payload = {"schema": SCHEMA_VERSION, "digest": code_digest(),
+               "kind": kind, "trace": spec_json, "cfg": cfg_to_json(cfg)}
+    if extra:
+        payload["extra"] = extra
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+def trace_meta(tr: Trace) -> dict:
+    return {"n_accesses": len(tr), "n_iters": tr.n_iters, "ii": tr.ii,
+            "irregular_fraction": tr.irregular_fraction,
+            "footprint": tr.footprint()}
+
+
+# ---------------------------------------------------------------------------
+# The keyed result store
+# ---------------------------------------------------------------------------
+
+class SimCache:
+    """JSON-per-key result store under ``artifacts/simcache/``.
+
+    Layout: ``<root>/<key[:2]>/<key>.json`` plus an advisory ``index.json``
+    (digest + one summary line per entry; rebuildable from the key files).
+    Lookups never trust the index: :meth:`get` reads the key file and
+    validates its schema/digest fields.
+    """
+
+    def __init__(self, root: str | os.PathLike | None = None):
+        env = os.environ.get("REPRO_SIMCACHE")
+        self.root = pathlib.Path(root if root is not None else env or DEFAULT_ROOT)
+        self._index: dict | None = None
+
+    def path(self, key: str) -> pathlib.Path:
+        return self.root / key[:2] / f"{key}.json"
+
+    def get(self, key: str) -> dict | None:
+        p = self.path(key)
+        try:
+            rec = json.loads(p.read_text())
+        except (OSError, ValueError):
+            return None
+        if rec.get("schema") != SCHEMA_VERSION or rec.get("digest") != code_digest():
+            return None
+        return rec
+
+    def put(self, key: str, record: dict, *, flush_index: bool = True) -> None:
+        record = {"schema": SCHEMA_VERSION, "digest": code_digest(), **record}
+        p = self.path(key)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        _atomic_write(p, json.dumps(record, sort_keys=True))
+        idx = self._load_index()
+        entry = {"kind": record.get("kind", "sim"),
+                 "trace": spec_label(record["trace"])}
+        if "stats" in record:
+            entry["cycles"] = record["stats"].get("cycles")
+        idx["entries"][key] = entry
+        if flush_index:
+            self.flush_index()
+
+    def _load_index(self) -> dict:
+        if self._index is None:
+            try:
+                idx = json.loads((self.root / "index.json").read_text())
+                assert isinstance(idx.get("entries"), dict)
+            except (OSError, ValueError, AssertionError):
+                idx = {"entries": {}}
+            idx["schema"] = SCHEMA_VERSION
+            idx["digest"] = code_digest()
+            self._index = idx
+        return self._index
+
+    def flush_index(self) -> None:
+        if self._index is not None:
+            self.root.mkdir(parents=True, exist_ok=True)
+            _atomic_write(self.root / "index.json",
+                          json.dumps(self._index, sort_keys=True, indent=1))
+
+    def prune_stale(self) -> int:
+        """Delete entries written against a different source digest or schema
+        (including pre-engine legacy files).  Returns the number removed."""
+        removed = 0
+        current = code_digest()
+        if not self.root.is_dir():
+            return 0
+        for p in self.root.glob("??/*.json"):
+            try:
+                rec = json.loads(p.read_text())
+                stale = (rec.get("schema") != SCHEMA_VERSION
+                         or rec.get("digest") != current)
+            except (OSError, ValueError):
+                stale = True
+            if stale:
+                p.unlink(missing_ok=True)
+                removed += 1
+        idx = self._load_index()
+        idx["entries"] = {k: v for k, v in idx["entries"].items()
+                          if self.path(k).exists()}
+        self.flush_index()
+        return removed
+
+
+def _atomic_write(path: pathlib.Path, text: str) -> None:
+    fd, tmp = tempfile.mkstemp(dir=path.parent, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
+# ---------------------------------------------------------------------------
+# Parallel execution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SweepResult:
+    point: "tuple"          # (label, SimConfig) as given
+    key: str
+    stats: Stats
+    trace_meta: dict
+    cached: bool            # True when served from the store
+
+
+#: per-process trace memo (worker processes are reused across map chunks and
+#: across sweeps); bounded because a full-size trace plus its precomputed
+#: list views can reach tens of MB
+_worker_traces: dict[str, Trace] = {}
+_WORKER_TRACE_CAP = 4
+
+
+def _trace_for(spec_blob: str) -> Trace:
+    tr = _worker_traces.get(spec_blob)
+    if tr is None:
+        while len(_worker_traces) >= _WORKER_TRACE_CAP:
+            _worker_traces.pop(next(iter(_worker_traces)))
+        tr = _worker_traces[spec_blob] = build_trace(json.loads(spec_blob))
+    return tr
+
+
+def _run_point(args: tuple[str, str]) -> tuple[dict, dict]:
+    """Worker entry: one (trace-spec JSON, SimConfig JSON) point."""
+    spec_blob, cfg_blob = args
+    tr = _trace_for(spec_blob)
+    stats = simulate(tr, cfg_from_json(json.loads(cfg_blob)))
+    return stats.to_dict(), trace_meta(tr)
+
+
+def _auto_workers() -> int:
+    env = os.environ.get("REPRO_SWEEP_WORKERS")
+    if env is not None:
+        return int(env)
+    return os.cpu_count() or 1
+
+
+def _pool_context():
+    """Worker-process start context (``REPRO_SWEEP_START`` overrides).
+
+    ``fork`` is preferred: workers are ready instantly, share the parent's
+    imports copy-on-write, and — unlike ``spawn``/``forkserver`` — never
+    re-execute the caller's ``__main__`` (the benchmark driver's main imports
+    JAX, which would cost seconds per worker).  Sweep workers themselves run
+    only NumPy + pure Python, so fork is safe; callers that mix JAX and
+    sweeps (``benchmarks.run``) warm the store before touching JAX.
+    """
+    method = os.environ.get("REPRO_SWEEP_START")
+    if method is None:
+        methods = multiprocessing.get_all_start_methods()
+        method = "fork" if "fork" in methods else "spawn"
+    return multiprocessing.get_context(method)
+
+
+_executor: ProcessPoolExecutor | None = None
+_executor_workers = 0
+
+
+def ensure_pool(n_workers: int | None = None) -> ProcessPoolExecutor | None:
+    """Create the shared worker pool now (idempotent).
+
+    The pool is persistent: workers keep their trace memos warm across
+    sweeps.  Under the fork start method the fork must happen before any
+    JAX backend threads exist, so mixed drivers (``benchmarks.run``) call
+    this once up front, before importing anything JAX-heavy; later sweeps
+    reuse the already-forked workers safely.
+    """
+    global _executor, _executor_workers
+    if _executor is None:
+        n = n_workers if n_workers is not None else _auto_workers()
+        if n > 1:
+            _executor = ProcessPoolExecutor(max_workers=n,
+                                            mp_context=_pool_context())
+            _executor_workers = n
+    return _executor
+
+
+def _pool_for_sweep() -> ProcessPoolExecutor | None:
+    """The shared pool, or ``None`` when parallelism must be declined.
+
+    Forking a process that already initialized JAX can deadlock the
+    children, so if no pool exists yet and JAX is loaded under the fork
+    start method, run inline instead of forking now.
+    """
+    if (_executor is None and "jax" in sys.modules
+            and _pool_context().get_start_method() == "fork"):
+        return None
+    return ensure_pool()
+
+
+def shutdown_pool() -> None:
+    """Tear down the shared worker pool (tests / embedders)."""
+    global _executor, _executor_workers
+    if _executor is not None:
+        _executor.shutdown()
+        _executor = None
+        _executor_workers = 0
+
+
+def sweep(points, *, store: SimCache | None = None,
+          workers: int | None = None) -> list[SweepResult]:
+    """Run every (trace-spec, SimConfig) point, in parallel, through the store.
+
+    Results come back in input order.  Cached points are served from
+    ``artifacts/simcache`` without building their traces; uncached points are
+    simulated across ``workers`` processes (auto-detected by default; 0 or 1
+    forces inline execution, also via ``REPRO_SWEEP_WORKERS``).
+    """
+    store = store if store is not None else SimCache()
+    norm = []
+    for spec, cfg in points:
+        spec_json = normalize_spec(spec)
+        norm.append((spec, cfg, spec_json, point_key(spec_json, cfg)))
+
+    results: dict[int, SweepResult] = {}
+    todo: list[int] = []
+    for i, (spec, cfg, spec_json, key) in enumerate(norm):
+        rec = store.get(key)
+        if rec is not None:
+            results[i] = SweepResult((spec, cfg), key,
+                                     Stats.from_dict(rec["stats"]),
+                                     rec["trace_meta"], cached=True)
+        else:
+            todo.append(i)
+
+    if todo:
+        # one task arg per point; sort by trace spec so map chunks land
+        # same-trace points in the same worker (per-process trace memo)
+        todo.sort(key=lambda i: json.dumps(norm[i][2], sort_keys=True))
+        args = [(json.dumps(norm[i][2], sort_keys=True),
+                 json.dumps(cfg_to_json(norm[i][1]), sort_keys=True))
+                for i in todo]
+        n_workers = min(workers if workers is not None else _auto_workers(),
+                        len(todo))
+        ex = _pool_for_sweep() if n_workers > 1 else None
+        if ex is not None:
+            chunk = max(1, -(-len(args) // (n_workers * 4)))
+            outs = list(ex.map(_run_point, args, chunksize=chunk))
+        else:
+            outs = [_run_point(a) for a in args]
+        for i, (stats_d, meta) in zip(todo, outs):
+            spec, cfg, spec_json, key = norm[i]
+            store.put(key, {"kind": "sim", "trace": spec_json,
+                            "cfg": cfg_to_json(cfg), "stats": stats_d,
+                            "trace_meta": meta}, flush_index=False)
+            results[i] = SweepResult((spec, cfg), key, Stats.from_dict(stats_d),
+                                     meta, cached=False)
+        store.flush_index()
+    return [results[i] for i in range(len(norm))]
+
+
+def simulate_cached(spec, cfg: SimConfig,
+                    store: SimCache | None = None) -> SweepResult:
+    """One point, inline (store-backed); convenience over :func:`sweep`."""
+    return sweep([(spec, cfg)], store=store, workers=0)[0]
+
+
+# ---------------------------------------------------------------------------
+# Cached §3.4 reconfiguration (runs inline: the profiler is JAX-based)
+# ---------------------------------------------------------------------------
+
+def reconfigure_cached(spec, cfg: SimConfig, *, window: int | None = 16_384,
+                       metric: str = "time",
+                       store: SimCache | None = None):
+    """Store-backed :func:`repro.core.cgra.reconfig.reconfigure`.
+
+    Returns a :class:`~repro.core.cgra.reconfig.ReconfigResult` whose
+    ``h_curves`` is ``None`` when served from the cache (the curves are
+    profiling intermediates; allocations/lines/config are what callers use).
+    """
+    store = store if store is not None else SimCache()
+    spec_json = normalize_spec(spec)
+    extra = {"window": window, "metric": metric}
+    key = point_key(spec_json, cfg, kind="reconfig", extra=extra)
+    from .reconfig import ReconfigResult, reconfigure
+
+    rec = store.get(key)
+    if rec is not None:
+        return ReconfigResult(rec["allocations"], rec["lines"], rec["profit"],
+                              None, cfg_from_json(rec["config"]))
+    res = reconfigure(build_trace(spec_json), cfg, window=window, metric=metric)
+    store.put(key, {"kind": "reconfig", "trace": spec_json,
+                    "cfg": cfg_to_json(cfg), "extra": extra,
+                    "allocations": list(res.allocations),
+                    "lines": list(res.lines), "profit": res.profit,
+                    "config": cfg_to_json(res.config)})
+    return res
+
+
+def _main(argv=None) -> int:
+    """``python -m repro.core.cgra.sweep`` — inspect / prune the store."""
+    import argparse
+
+    ap = argparse.ArgumentParser(description="simcache store maintenance")
+    ap.add_argument("--root", default=None, help="store root (default: "
+                    "REPRO_SIMCACHE or artifacts/simcache)")
+    ap.add_argument("--prune", action="store_true",
+                    help="delete entries from older source digests/schemas")
+    args = ap.parse_args(argv)
+    store = SimCache(args.root)
+    files = list(store.root.glob("??/*.json")) if store.root.is_dir() else []
+    live = sum(1 for p in files
+               if store.get(p.stem) is not None)
+    print(f"root={store.root} entries={len(files)} current_digest={code_digest()}"
+          f" live={live} stale={len(files) - live}")
+    if args.prune:
+        print(f"pruned={store.prune_stale()}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

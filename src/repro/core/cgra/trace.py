@@ -50,7 +50,13 @@ class Array:
 
 @dataclasses.dataclass
 class Trace:
-    """Program-order memory-access trace of a mapped kernel."""
+    """Program-order memory-access trace of a mapped kernel.
+
+    Derived views that the simulator hot loop needs on every run (iteration
+    boundaries, plain-list columns, SPM membership masks) are computed once
+    and memoized on the trace, so sweeping many :class:`SimConfig` points over
+    one trace pays the preprocessing cost a single time.
+    """
 
     name: str
     pe: np.ndarray        # int16  [N]
@@ -61,6 +67,8 @@ class Trace:
     arrays: dict[str, Array]
     ii: int               # initiation interval of the mapped DFG
     n_iters: int
+    _memo: dict = dataclasses.field(default_factory=dict, repr=False,
+                                    compare=False)
 
     def __len__(self) -> int:
         return int(self.addr.shape[0])
@@ -72,6 +80,74 @@ class Trace:
 
     def footprint(self) -> int:
         return sum(a.size for a in self.arrays.values())
+
+    # -- memoized derived views (simulator hot-loop preprocessing) ----------
+    def iter_starts(self) -> np.ndarray:
+        """Iteration boundary indices (with a trailing ``len(self)``)."""
+        if "iter_starts" not in self._memo:
+            starts = np.flatnonzero(np.r_[True, np.diff(self.iter_id) != 0])
+            self._memo["iter_starts"] = np.r_[starts, len(self)]
+        return self._memo["iter_starts"]
+
+    def as_lists(self) -> tuple[list, list, list, list, list]:
+        """The five trace columns as plain Python lists.
+
+        Indexing a Python list in the cycle-by-cycle walk is several times
+        faster than pulling NumPy scalars out of an ndarray, and the
+        conversion is paid once per trace rather than once per access per
+        swept configuration.
+        """
+        if "lists" not in self._memo:
+            self._memo["lists"] = (self.pe.tolist(), self.addr.tolist(),
+                                   self.is_store.tolist(),
+                                   self.addr_dep.tolist(),
+                                   self.iter_id.tolist())
+        return self._memo["lists"]
+
+    def spm_mask(self, spm_bytes: int) -> np.ndarray:
+        """Memoized :func:`plan_spm` (the plan is pure in (trace, size))."""
+        key = ("spm", int(spm_bytes))
+        if key not in self._memo:
+            self._memo[key] = plan_spm(self, spm_bytes)
+        return self._memo[key]
+
+    def cache_index(self, n_caches: int) -> np.ndarray:
+        """Per-access L1 id under the round-robin PE->cache map (§3.3)."""
+        key = ("cache_of", int(n_caches))
+        if key not in self._memo:
+            self._memo[key] = (self.pe.astype(np.int64) % n_caches)
+        return self._memo[key]
+
+
+def plan_spm(trace: Trace, spm_bytes: int) -> np.ndarray:
+    """Compile-time SPM allocation: pin array prefixes greedily by access
+    density (accesses per byte).  Returns a per-access ``in_spm`` mask."""
+    if spm_bytes <= 0:
+        return np.zeros(len(trace), dtype=bool)
+    arrays = list(trace.arrays.values())
+    counts = {a.name: 0 for a in arrays}
+    bases = np.array([a.base for a in arrays], dtype=np.int64)
+    order = np.argsort(bases)
+    sorted_bases = bases[order]
+    which = np.searchsorted(sorted_bases, trace.addr, side="right") - 1
+    cnt = np.bincount(which, minlength=len(arrays))
+    for k, a_idx in enumerate(order):
+        counts[arrays[a_idx].name] = int(cnt[k])
+
+    remaining = spm_bytes
+    pinned: list[tuple[int, int]] = []
+    for a in sorted(arrays, key=lambda a: counts[a.name] / max(1, a.size),
+                    reverse=True):
+        if remaining <= 0:
+            break
+        take = min(a.size, remaining)
+        pinned.append((a.base, a.base + take))
+        remaining -= take
+
+    mask = np.zeros(len(trace), dtype=bool)
+    for lo, hi in pinned:
+        mask |= (trace.addr >= lo) & (trace.addr < hi)
+    return mask
 
 
 class _TraceBuilder:

@@ -4,7 +4,8 @@ OracleCache (naive dict LRU)  <->  Cache (timing model)  <->  jaxcache (vmap).
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core.cgra.cache import Cache, CacheConfig, OracleCache
 from repro.core.cgra import jaxcache

@@ -3,7 +3,7 @@ import dataclasses
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.core.cgra import presets, simulate
 from repro.core.cgra.reconfig import (algorithm1, brute_force_allocation,

@@ -1,0 +1,194 @@
+"""Sweep-engine tests: golden parity, store round-trips, invalidation.
+
+The GOLDEN table pins the refactored simulator (`_engine.py` + precomputed
+`Trace` views) to the pre-refactor, seed-commit simulator: the values were
+produced by the original single-file `simulator.py` and must stay
+bit-identical.  Each entry is
+``(cycles, stall_cycles, l1_hits, l1_misses, dram_accesses, prefetch_issued)``.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.cgra import presets, simulate
+from repro.core.cgra import sweep as sw
+from repro.core.cgra.cache import CacheConfig
+from repro.core.cgra.simulator import SimConfig, Stats
+
+TRACES = {
+    "gcn_cora_800": ("gcn_aggregate", {"dataset": "cora", "max_edges": 800}),
+    "radix_hist_4k": ("radix_hist", {"n": 4096, "n_buckets": 512}),
+    "rgb_2k": ("rgb", {"n": 2048, "palette_size": 8192}),
+}
+CONFIGS = {
+    "cache_spm": presets.CACHE_SPM,
+    "runahead": presets.RUNAHEAD,
+    "spm_only_4k": presets.SPM_ONLY_4K,
+    "reconfig": presets.RECONFIG,
+}
+
+# seed-commit simulator outputs (see module docstring)
+GOLDEN = {
+    ("gcn_cora_800", "cache_spm"): (48984, 43640, 4722, 622, 537, 0),
+    ("gcn_cora_800", "runahead"): (8476, 3132, 5295, 49, 537, 592),
+    ("gcn_cora_800", "spm_only_4k"): (303680, 302080, 0, 0, 4576, 0),
+    ("gcn_cora_800", "reconfig"): (24368, 22768, 3109, 443, 267, 0),
+    ("radix_hist_4k", "cache_spm"): (31967, 21760, 7854, 272, 272, 0),
+    ("radix_hist_4k", "runahead"): (17252, 7045, 8038, 88, 272, 184),
+    ("radix_hist_4k", "spm_only_4k"): (294912, 286720, 0, 0, 3584, 0),
+    ("radix_hist_4k", "reconfig"): (15232, 7040, 2400, 160, 80, 0),
+    ("rgb_2k", "cache_spm"): (66103, 60215, 3810, 2078, 747, 0),
+    ("rgb_2k", "runahead"): (15435, 9547, 5577, 311, 767, 2100),
+    ("rgb_2k", "spm_only_4k"): (249856, 245760, 0, 0, 5120, 0),
+    ("rgb_2k", "reconfig"): (36938, 32842, 2172, 1924, 320, 0),
+}
+
+
+def _observed(stats: Stats) -> tuple:
+    return (stats.cycles, stats.stall_cycles, stats.l1_hits, stats.l1_misses,
+            stats.dram_accesses, stats.prefetch_issued)
+
+
+@pytest.mark.parametrize("trace_name", sorted(TRACES))
+def test_engine_parity_with_seed_simulator(trace_name):
+    tr = sw.build_trace(sw.normalize_spec(TRACES[trace_name]))
+    for cfg_name, cfg in CONFIGS.items():
+        got = _observed(simulate(tr, cfg))
+        assert got == GOLDEN[(trace_name, cfg_name)], (trace_name, cfg_name)
+
+
+# ---------------------------------------------------------------------------
+# Store round-trips
+# ---------------------------------------------------------------------------
+
+POINT = (TRACES["gcn_cora_800"], presets.CACHE_SPM)
+
+
+def test_sweep_miss_then_hit(tmp_path):
+    store = sw.SimCache(tmp_path)
+    r1 = sw.sweep([POINT], store=store, workers=0)[0]
+    assert not r1.cached
+    assert _observed(r1.stats) == GOLDEN[("gcn_cora_800", "cache_spm")]
+    assert store.path(r1.key).is_file()
+
+    r2 = sw.sweep([POINT], store=store, workers=0)[0]
+    assert r2.cached and r2.key == r1.key
+    assert r2.stats == r1.stats
+    assert r2.trace_meta == r1.trace_meta
+    assert r2.trace_meta["n_iters"] == 800
+
+    idx = json.loads((tmp_path / "index.json").read_text())
+    assert r1.key in idx["entries"]
+    assert idx["entries"][r1.key]["cycles"] == r1.stats.cycles
+
+
+def test_sweep_preserves_input_order_and_dedups_nothing(tmp_path):
+    store = sw.SimCache(tmp_path)
+    pts = [(TRACES["rgb_2k"], presets.CACHE_SPM),
+           (TRACES["gcn_cora_800"], presets.CACHE_SPM),
+           (TRACES["rgb_2k"], presets.CACHE_SPM)]
+    res = sw.sweep(pts, store=store, workers=0)
+    assert [r.stats.cycles for r in res] == [
+        GOLDEN[("rgb_2k", "cache_spm")][0],
+        GOLDEN[("gcn_cora_800", "cache_spm")][0],
+        GOLDEN[("rgb_2k", "cache_spm")][0],
+    ]
+    assert res[0].key == res[2].key
+
+
+def test_source_digest_change_invalidates_and_prunes(tmp_path, monkeypatch):
+    store = sw.SimCache(tmp_path)
+    r1 = sw.sweep([POINT], store=store, workers=0)[0]
+    assert not r1.cached
+
+    monkeypatch.setattr(sw, "_digest_memo", "0123456789abcdef")
+    store2 = sw.SimCache(tmp_path)
+    r2 = sw.sweep([POINT], store=store2, workers=0)[0]
+    assert not r2.cached                      # old entry unreachable
+    assert r2.key != r1.key
+    assert r2.stats.cycles == r1.stats.cycles
+
+    # prune removes exactly the entry written under the old digest
+    assert sw.SimCache(tmp_path).prune_stale() == 1
+    assert not store.path(r1.key).exists()
+    assert store.path(r2.key).is_file()
+
+
+def test_prune_removes_legacy_and_corrupt_files(tmp_path):
+    store = sw.SimCache(tmp_path)
+    sw.sweep([POINT], store=store, workers=0)
+    legacy = tmp_path / "ab" / ("ab" + "0" * 62 + ".json")
+    legacy.parent.mkdir(parents=True, exist_ok=True)
+    legacy.write_text(json.dumps({"name": "grad", "cycles": 1}))  # pre-engine
+    corrupt = tmp_path / "cd" / ("cd" + "1" * 62 + ".json")
+    corrupt.parent.mkdir(parents=True, exist_ok=True)
+    corrupt.write_text("{not json")
+    assert sw.SimCache(tmp_path).prune_stale() == 2
+    assert not legacy.exists() and not corrupt.exists()
+
+
+def test_simconfig_json_round_trip():
+    cfg = SimConfig(
+        spm_bytes=2048, n_caches=2,
+        l1=CacheConfig(ways=2, line=32, way_bytes=256),
+        l1_per_cache=(CacheConfig(ways=1, line=16, way_bytes=128),
+                      CacheConfig(ways=3, line=64, way_bytes=512)),
+        l2=None, mshr=4, runahead=True, spm_only=False)
+    assert sw.cfg_from_json(json.loads(json.dumps(sw.cfg_to_json(cfg)))) == cfg
+    assert sw.cfg_from_json(sw.cfg_to_json(presets.CACHE_SPM)) == presets.CACHE_SPM
+
+
+def test_bad_trace_specs_rejected():
+    with pytest.raises(KeyError):
+        sw.normalize_spec("no_such_kernel")
+    with pytest.raises(KeyError):
+        sw.normalize_spec(("_TraceBuilder", {}))
+    with pytest.raises(TypeError):
+        sw.normalize_spec(42)
+
+
+def test_parallel_workers_match_inline(tmp_path):
+    """End-to-end parallel path, exercised in a fresh interpreter (keeps the
+    forked worker pool away from any JAX state the test session holds)."""
+    spec = TRACES["radix_hist_4k"]
+    script = (
+        "import json, sys\n"
+        "from repro.core.cgra import presets\n"
+        "from repro.core.cgra import sweep as sw\n"
+        f"store = sw.SimCache({str(tmp_path)!r})\n"
+        f"pts = [({spec!r}, presets.CACHE_SPM), ({spec!r}, presets.RUNAHEAD),\n"
+        f"       ({spec!r}, presets.SPM_ONLY_4K)]\n"
+        "res = sw.sweep(pts, store=store, workers=2)\n"
+        "print(json.dumps([r.stats.cycles for r in res]))\n"
+    )
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", script], env=env, timeout=300,
+                         capture_output=True, text=True)
+    assert out.returncode == 0, out.stderr
+    cycles = json.loads(out.stdout.strip().splitlines()[-1])
+    assert cycles == [GOLDEN[("radix_hist_4k", "cache_spm")][0],
+                      GOLDEN[("radix_hist_4k", "runahead")][0],
+                      GOLDEN[("radix_hist_4k", "spm_only_4k")][0]]
+    # and this process reads those parallel-written entries as hits
+    res = sw.sweep([(spec, presets.CACHE_SPM)], store=sw.SimCache(tmp_path),
+                   workers=0)
+    assert res[0].cached
+
+
+def test_reconfigure_cached_round_trip(tmp_path):
+    store = sw.SimCache(tmp_path)
+    spec = TRACES["gcn_cora_800"]
+    r1 = sw.reconfigure_cached(spec, presets.RECONFIG, window=2048, store=store)
+    r2 = sw.reconfigure_cached(spec, presets.RECONFIG, window=2048, store=store)
+    assert r2.allocations == list(r1.allocations)
+    assert r2.lines == list(r1.lines)
+    assert r2.config == r1.config
+    assert r2.config.l1_per_cache is not None
+    # different window is a different point
+    r3 = sw.reconfigure_cached(spec, presets.RECONFIG, window=1024, store=store)
+    assert r3.h_curves is not None            # computed, not served from cache
