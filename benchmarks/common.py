@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import functools
 import os
+import time
 
 from repro.core.cgra import SimConfig, Stats
 from repro.core.cgra import sweep as sweep_engine
@@ -40,22 +41,32 @@ STORE = sweep_engine.SimCache()
 _stats: dict[tuple[str, SimConfig], Stats] = {}
 _meta: dict[str, dict] = {}
 
+#: cumulative sweep accounting for ``BENCH_sim.json`` (benchmarks.run):
+#: wall-clock spent inside sweeps and per-engine point counts
+SWEEP_REPORT = {"seconds": 0.0, "points": 0, "cached": 0,
+                "batched": 0, "scalar": 0}
+
 
 def warm(points) -> None:
     """Ensure every (kernel-name, SimConfig) point is simulated + memoized.
 
-    Uncached points run in one parallel sweep; cached ones are read from
-    ``artifacts/simcache``.  Figure drivers call this with their full point
-    list before emitting rows, so a driver is one batched sweep rather than
-    a sequence of blocking ``simulate`` calls.
+    Uncached points run in one sweep — grouped into per-trace lane batches
+    for the batched engine, in parallel worker processes — and cached ones
+    are read from ``artifacts/simcache``.  Figure drivers call this with
+    their full point list before emitting rows, so a whole figure axis is
+    one batched call rather than a sequence of blocking ``simulate`` calls.
     """
     todo = [p for p in dict.fromkeys(points) if p not in _stats]
     if not todo:
         return
+    t0 = time.perf_counter()
     for r in sweep_engine.sweep(todo, store=STORE):
         name, cfg = r.point
         _stats[(name, cfg)] = r.stats
         _meta[name] = r.trace_meta
+        SWEEP_REPORT["cached" if r.cached else r.engine] += 1
+    SWEEP_REPORT["seconds"] += time.perf_counter() - t0
+    SWEEP_REPORT["points"] += len(todo)
 
 
 def sim(name: str, cfg: SimConfig) -> Stats:

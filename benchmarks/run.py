@@ -7,9 +7,12 @@ REPRO_BENCH_QUICK=1 for a fast subset.
 
 Execution model: every figure driver declares its (kernel, SimConfig) sweep
 points, and this driver warms them all through the sweep engine in ONE
-parallel batch before any figure emits a row.  Results persist in
-``artifacts/simcache/``, so a re-run only simulates points whose kernel,
-configuration, or simulator source changed (cache-warm-incremental).
+parallel batch before any figure emits a row — grouped per trace into lane
+batches for the batched engine (runahead points fall back to the scalar
+walk).  Results persist in ``artifacts/simcache/``, so a re-run only
+simulates points whose kernel, configuration, or simulator source changed
+(cache-warm-incremental).  Each invocation also records sweep throughput in
+``BENCH_sim.json`` at the repo root (see :func:`write_bench_sim`).
 
 The Pallas kernel microbenchmarks and the roofline pass are imported lazily
 *after* the sweep so the warm phase — and its forked worker processes —
@@ -25,7 +28,9 @@ from . import (common, fig11_exec_time, fig12_cache_sweeps, fig13_runahead,
                fig14_mshr, fig15_accuracy, fig16_coverage, fig17_reconfig,
                motivation)
 
-SUMMARY = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench_summary.json"
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SUMMARY = ROOT / "artifacts" / "bench_summary.json"
+BENCH_SIM = ROOT / "BENCH_sim.json"
 
 FIGURES = (motivation, fig11_exec_time, fig12_cache_sweeps, fig13_runahead,
            fig14_mshr, fig15_accuracy, fig16_coverage, fig17_reconfig)
@@ -37,6 +42,40 @@ def sweep_points() -> list:
     for mod in FIGURES:
         pts += mod.points()
     return list(dict.fromkeys(pts))
+
+
+def write_bench_sim(total_seconds: float) -> dict:
+    """Persist this run's sweep-perf record to ``BENCH_sim.json``.
+
+    The file keeps one record per (cache regime x mode) — ``cold_quick``,
+    ``warm_quick``, ``cold_full``, ``warm_full`` — so the repo root carries
+    both ends of the perf trajectory for future comparisons (cold = most
+    points simulated; warm = most points read back from the simcache).
+    """
+    rep = dict(common.SWEEP_REPORT)
+    computed = rep["batched"] + rep["scalar"]
+    record = {
+        "quick": common.QUICK,
+        "wall_seconds": round(total_seconds, 3),
+        "sweep_seconds": round(rep["seconds"], 3),
+        "points": rep["points"],
+        "cached_points": rep["cached"],
+        "batched_points": rep["batched"],
+        "scalar_points": rep["scalar"],
+        "points_per_sec": round(rep["points"] / rep["seconds"], 2)
+        if rep["seconds"] else None,
+    }
+    try:
+        doc = json.loads(BENCH_SIM.read_text())
+        if not isinstance(doc, dict) or not isinstance(doc.get("runs"), dict):
+            raise ValueError("malformed BENCH_sim.json")
+    except (OSError, ValueError):
+        doc = {"schema": 1, "runs": {}}
+    name = ("cold" if computed >= rep["cached"] else "warm") \
+        + ("_quick" if common.QUICK else "_full")
+    doc["runs"][name] = record
+    BENCH_SIM.write_text(json.dumps(doc, indent=2) + "\n")
+    return record
 
 
 def main() -> None:
@@ -61,6 +100,7 @@ def main() -> None:
     kernels_bench.run()
     rows = roofline.run()
     summary["roofline_cells"] = len(rows)
+    summary["bench_sim"] = write_bench_sim(time.time() - t0)
     SUMMARY.parent.mkdir(parents=True, exist_ok=True)
     SUMMARY.write_text(json.dumps(summary, indent=2, default=float))
     print(f"total_bench_seconds,{(time.time() - t0) * 1e6:.0f},"

@@ -4,18 +4,27 @@ This module is the hot path behind :func:`repro.core.cgra.simulate`.  The
 public `simulator` module owns configuration (:class:`SimConfig`), statistics
 (:class:`Stats`) and orchestration; this module owns the machinery:
 
-* :class:`_DramBus` / :class:`_Mshr` — timing primitives;
-* :class:`_Subsystem` — SPM + multi-L1 + shared L2 + DRAM with prefetch
-  classification;
+* :class:`_DramBus` / :class:`_Mshr` — timing primitives (shared with the
+  batched engine's per-lane timing replay);
 * :func:`run` — the per-iteration walk (demand path + runahead walker).
 
 The walk consumes the trace's *precomputed* views (``Trace.as_lists()``,
-``Trace.iter_starts()``, ``Trace.spm_mask()``, ``Trace.cache_index()``) so
-per-access work is plain-``int`` list indexing, and the same-cycle L1
-arbitration penalty (§3.1) is computed for every iteration at once with one
-``bincount`` instead of a per-iteration Python pass.  The cycle-by-cycle
-semantics are bit-identical to the pre-split simulator; `tests/test_sweep.py`
-pins that with golden cycle counts.
+``Trace.iter_starts()``, ``Trace.spm_mask()``, ``Trace.cache_index()``,
+``Trace.arbitration_extra()``) plus per-config (line, set, tag) columns
+derived with one vectorized pass, so per-access work is plain-``int`` list
+indexing and dict lookups.  L1/L2 state is kept as per-set ``dict``s whose
+*insertion order is the LRU order* (hit → delete + reinsert moves an entry
+to MRU; the victim is ``next(iter(set_dict))``): recency stamps in the old
+``Cache``-object walk were unique and monotone, so ordering by them is
+exactly ordering by last touch, and the dict form needs no counter and no
+``min()`` scan.  The cycle-by-cycle semantics are bit-identical to the
+pre-split simulator; `tests/test_sweep.py` pins that with golden cycle
+counts, and the batched engine (:mod:`._batch_engine`) is pinned against
+this one.
+
+Lanes that need runahead run here (the walker's prefetch decisions couple
+timing to cache content, so there is no timing-independent structure to
+batch over); everything else is better served by ``_batch_engine``.
 """
 from __future__ import annotations
 
@@ -23,7 +32,6 @@ import bisect
 
 import numpy as np
 
-from .cache import Cache
 from .trace import Trace
 
 
@@ -71,165 +79,119 @@ class _Mshr:
         return len(self.ready) < self.entries
 
 
-class _Subsystem:
-    """SPM + multi-L1 + shared L2 + DRAM, with prefetch classification."""
+def _l1_columns(trace: Trace, cfg):
+    """Per-access (line, set, tag) columns under ``cfg``'s L1 geometry.
 
-    def __init__(self, cfg, stats):
-        self.cfg = cfg
-        self.stats = stats
-        self.l1s = [Cache(c) for c in cfg.l1_configs()]
-        self.mshrs = [_Mshr(cfg.mshr) for _ in self.l1s]
-        self.l2 = Cache(cfg.l2) if (cfg.l2 is not None and not cfg.spm_only) else None
-        self.bus = _DramBus(cfg.dram_latency, cfg.dram_bus_bytes_per_cycle)
-        # prefetch records: pf_id -> (cache_id, line_addr, issue_trace_idx)
-        self.pf_records: list[tuple[int, int, int]] = []
-        self.pf_outcome: list[str] = []  # "used" | "evicted" | "pending"
-
-    # -- helpers -------------------------------------------------------------
-    def _fill_latency(self, c: int, line_addr: int, now: int) -> int:
-        """Cycle at which a fill for ``line_addr`` (L1 ``c``) completes."""
-        l1 = self.l1s[c]
-        byte_addr = line_addr * l1.cfg.line
-        if self.l2 is not None:
-            e2 = self.l2.probe(self.l2.line_addr(byte_addr))
-            if e2 is not None and e2.ready <= now:
-                self.l2.touch(e2)
-                self.stats.l2_hits += 1
-                return now + self.cfg.l2_hit_latency
-            self.stats.dram_accesses += 1
-            ready = self.bus.request(now, self.l2.cfg.line)
-            self.l2.install(self.l2.line_addr(byte_addr), ready)
-            return ready
-        self.stats.dram_accesses += 1
-        return self.bus.request(now, l1.cfg.line)
-
-    def _note_eviction(self, victim) -> None:
-        if victim is not None and victim.pf_unused and victim.pf_id >= 0:
-            self.pf_outcome[victim.pf_id] = "evicted"
-
-    # -- demand path ----------------------------------------------------------
-    def demand(self, c: int, addr: int, store: bool, now: int,
-               trace_idx: int) -> int:
-        """Execute a demand access at cycle ``now``; returns the cycle at
-        which the CGRA may proceed (== now when there is no stall)."""
-        l1 = self.l1s[c]
-        line = l1.line_addr(addr)
-        e = l1.probe(line)
-        if e is not None:
-            l1.touch(e)
-            if store:
-                e.dirty = True
-            if e.pf_unused:
-                e.pf_unused = False
-                if e.pf_id >= 0:
-                    self.pf_outcome[e.pf_id] = "used"
-                self.stats.prefetch_used += 1
-                self.stats.covered_misses += 1
-            if e.ready > now and not store:
-                # in-flight fill: partial wait (MSHR secondary merge)
-                self.stats.l1_hits += 1
-                return e.ready
-            self.stats.l1_hits += 1
-            return now
-        # miss
-        self.stats.l1_misses += 1
-        mshr = self.mshrs[c]
-        issue = mshr.free_at(now)          # stall here if MSHR exhausted
-        ready = self._fill_latency(c, line, issue)
-        mshr.occupy(ready)
-        victim = l1.install(line, ready)
-        self._note_eviction(victim)
-        ent = l1.probe(line)
-        if store:
-            ent.dirty = True
-            return max(now, issue)          # store buffer absorbs the miss
-        self.stats.uncovered_misses += 1
-        return ready
-
-    def demand_spm_only(self, addr: int, store: bool, now: int) -> int:
-        """SPM-only baseline: every non-SPM access is a word-wide DRAM
-        transaction."""
-        self.stats.dram_accesses += 1
-        ready = self.bus.request(now, 4)
-        if store:
-            return now                      # write buffer
-        return ready
-
-    # -- runahead (prefetch) path ----------------------------------------------
-    def runahead_probe(self, c: int, addr: int, now: int) -> str:
-        """Probe during runahead: 'hit' (value available), 'inflight'
-        (line fetching; value dummy, no prefetch needed), or 'miss'."""
-        l1 = self.l1s[c]
-        e = l1.probe(l1.line_addr(addr))
-        if e is None:
-            return "miss"
-        l1.touch(e)
-        return "hit" if e.ready <= now else "inflight"
-
-    def prefetch(self, c: int, addr: int, now: int, trace_idx: int) -> bool:
-        """Issue a precise prefetch (if an MSHR entry is free)."""
-        mshr = self.mshrs[c]
-        if not mshr.has_free(now):
-            return False
-        l1 = self.l1s[c]
-        line = l1.line_addr(addr)
-        ready = self._fill_latency(c, line, now)
-        mshr.occupy(ready)
-        pf_id = len(self.pf_records)
-        self.pf_records.append((c, line, trace_idx))
-        self.pf_outcome.append("pending")
-        victim = l1.install(line, ready, pf_unused=True, pf_id=pf_id)
-        self._note_eviction(victim)
-        self.stats.prefetch_issued += 1
-        return True
-
-
-def _arbitration_extra(trace: Trace, in_spm: np.ndarray, cache_idx: np.ndarray,
-                       n_caches: int, starts: np.ndarray, ii: int) -> np.ndarray:
-    """Per-iteration arbitration penalty, all iterations at once (§3.1).
-
-    The k-th same-cycle request to one L1 waits k cycles beyond the II's
-    scheduled issue slots, so an iteration pays ``max_c(count_c) - ii`` extra
-    cycles when any single L1 receives more than ``ii`` non-SPM requests.
+    One vectorized pass replaces three Python arithmetic ops per access per
+    simulated config.  Returns plain lists (fastest to index in the walk).
     """
-    n_iters = len(starts) - 1
-    sizes = np.diff(starts)
-    if n_iters == 0 or not len(trace):
-        return np.zeros(n_iters, dtype=np.int64)
-    it_of = np.repeat(np.arange(n_iters, dtype=np.int64), sizes)
-    sel = ~in_spm
-    key = it_of[sel] * n_caches + cache_idx[sel]
-    cnt = np.bincount(key, minlength=n_iters * n_caches)
-    per_iter_max = cnt.reshape(n_iters, n_caches).max(axis=1)
-    return np.maximum(0, per_iter_max - ii)
+    l1cfgs = cfg.l1_configs()
+    cache_idx = trace.cache_index(cfg.n_caches)
+    if len({(c.line, c.sets) for c in l1cfgs}) == 1:
+        line = trace.addr // l1cfgs[0].line
+        nsets = l1cfgs[0].sets
+    else:
+        lines_c = np.asarray([c.line for c in l1cfgs], dtype=np.int64)
+        sets_c = np.asarray([c.sets for c in l1cfgs], dtype=np.int64)
+        line = trace.addr // lines_c[cache_idx]
+        nsets = sets_c[cache_idx]
+    return (line.tolist(), (line % nsets).tolist(), (line // nsets).tolist())
 
 
 def run(trace: Trace, cfg, stats) -> None:
     """Walk one trace through one configuration, mutating ``stats``."""
-    sub = _Subsystem(cfg, stats)
-    in_spm_arr = trace.spm_mask(cfg.spm_bytes)
     n = len(trace)
     pe, addr, is_store, addr_dep, iter_id = trace.as_lists()
-    in_spm = in_spm_arr.tolist()
+    in_spm = trace.spm_mask(cfg.spm_bytes).tolist()
     ii = trace.ii
-    n_caches = cfg.n_caches
-    cache_idx_arr = trace.cache_index(n_caches)
-    cache_of = cache_idx_arr.tolist()    # per-access L1 id (indexed by j)
-
-    starts_arr = trace.iter_starts()
-    starts = starts_arr.tolist()
+    starts = trace.iter_starts().tolist()
     n_iters = len(starts) - 1
     stats.compute_cycles = n_iters * ii
 
     if cfg.spm_only:
-        extra = [0] * n_iters
+        _run_spm_only(cfg, stats, in_spm, is_store, starts, n_iters, ii)
+        return
+
+    n_caches = cfg.n_caches
+    cache_of = trace.cache_index(n_caches).tolist()
+    extra = trace.arbitration_extra(cfg.spm_bytes, n_caches).tolist()
+    acc_line, acc_set, acc_tag = _l1_columns(trace, cfg)
+
+    l1cfgs = cfg.l1_configs()
+    l1_line = [c.line for c in l1cfgs]
+    l1_ways = [c.ways for c in l1cfgs]
+    # entry := [ready_cycle, pf_unused, pf_id]; dict order == LRU order
+    l1_sets: list[list[dict]] = [[{} for _ in range(c.sets)] for c in l1cfgs]
+    mshrs = [_Mshr(cfg.mshr) for _ in l1cfgs]
+    bus = _DramBus(cfg.dram_latency, cfg.dram_bus_bytes_per_cycle)
+
+    # counters (folded into stats at the end)
+    l1_hits = l1_misses = l2_hits = dram = 0
+    spm_accesses = stall = uncovered = 0
+    prefetch_issued = prefetch_used = covered = runahead_entries = 0
+    # prefetch records: pf_id -> (cache_id, line_addr, issue_trace_idx)
+    pf_records: list[tuple[int, int, int]] = []
+    pf_outcome: list[str] = []  # "used" | "evicted" | "pending"
+
+    if cfg.l2 is not None:
+        l2_line = cfg.l2.line
+        l2_nsets = cfg.l2.sets
+        l2_ways = cfg.l2.ways
+        l2_hit_lat = cfg.l2_hit_latency
+        l2_sets: list[dict] = [{} for _ in range(l2_nsets)]
+
+        def fill_latency(c: int, line: int, now: int) -> int:
+            """Cycle at which a fill for ``line`` (L1 ``c``) completes."""
+            nonlocal l2_hits, dram
+            l2l = (line * l1_line[c]) // l2_line
+            d2 = l2_sets[l2l % l2_nsets]
+            tg2 = l2l // l2_nsets
+            r2 = d2.get(tg2)
+            if r2 is not None and r2 <= now:
+                del d2[tg2]               # touch: move to MRU
+                d2[tg2] = r2
+                l2_hits += 1
+                return now + l2_hit_lat
+            dram += 1
+            ready = bus.request(now, l2_line)
+            if r2 is not None:            # refresh the in-flight line (MRU)
+                del d2[tg2]
+            elif len(d2) >= l2_ways:
+                del d2[next(iter(d2))]
+            d2[tg2] = ready
+            return ready
     else:
-        extra = _arbitration_extra(trace, in_spm_arr, cache_idx_arr, n_caches,
-                                   starts_arr, ii).tolist()
+
+        def fill_latency(c: int, line: int, now: int) -> int:
+            nonlocal dram
+            dram += 1
+            return bus.request(now, l1_line[c])
+
+    def prefetch(c: int, j: int, now: int) -> None:
+        """Issue a precise prefetch (if an MSHR entry is free)."""
+        nonlocal prefetch_issued
+        mshr = mshrs[c]
+        if not mshr.has_free(now):
+            return
+        ready = fill_latency(c, acc_line[j], now)
+        mshr.occupy(ready)
+        pf_id = len(pf_records)
+        pf_records.append((c, acc_line[j], j))
+        pf_outcome.append("pending")
+        ways = l1_ways[c]
+        if ways > 0:
+            d = l1_sets[c][acc_set[j]]
+            if len(d) >= ways:
+                victim = d.pop(next(iter(d)))
+                if victim[1] and victim[2] >= 0:
+                    pf_outcome[victim[2]] = "evicted"
+            d[acc_tag[j]] = [ready, True, pf_id]
+        prefetch_issued += 1
 
     def run_walker(j0: int, now: int, deadline: int, blocked: int) -> None:
         """Runahead execution during the stall window [now, deadline)."""
-        stats.runahead_entries += 1
+        nonlocal runahead_entries
+        runahead_entries += 1
         dummy: set[int] = {blocked}
         temp: set[int] = set()            # addrs written to temporary storage
         ra_cycle = now
@@ -242,94 +204,164 @@ def run(trace: Trace, cfg, stats) -> None:
                 if ra_cycle >= deadline:
                     break
             dep = addr_dep[j]
-            valid_addr = dep < 0 or dep not in dummy
-            if not valid_addr:
+            if dep >= 0 and dep in dummy:
                 if not is_store[j]:
                     dummy.add(j)          # dummy address -> dummy value
                 j += 1
                 continue
-            a = addr[j]
             if in_spm[j]:
                 if is_store[j]:
-                    temp.add(a)
+                    temp.add(addr[j])
                 j += 1
                 continue
             c = cache_of[j]
+            d = l1_sets[c][acc_set[j]]
+            tg = acc_tag[j]
+            ent = d.get(tg)
             if is_store[j]:
                 # redirect to temp storage + convert to prefetch-read (§3.2)
-                temp.add(a)
-                if sub.runahead_probe(c, a, ra_cycle) == "miss":
-                    sub.prefetch(c, a, ra_cycle, j)
+                temp.add(addr[j])
+                if ent is None:
+                    prefetch(c, j, ra_cycle)
+                else:
+                    del d[tg]             # probe touches resident lines
+                    d[tg] = ent
                 j += 1
                 continue
             # load
-            if a in temp:
+            if addr[j] in temp:
                 j += 1
                 continue
-            outcome = sub.runahead_probe(c, a, ra_cycle)
-            if outcome == "hit":
-                pass
-            elif outcome == "inflight":
-                dummy.add(j)              # data not back yet -> dummy value
-            else:
-                sub.prefetch(c, a, ra_cycle, j)
+            if ent is None:
+                prefetch(c, j, ra_cycle)
                 dummy.add(j)
+            else:
+                del d[tg]
+                d[tg] = ent
+                if ent[0] > ra_cycle:
+                    dummy.add(j)          # in-flight: value dummy
+
             j += 1
 
-    spm_only = cfg.spm_only
-    runahead = cfg.runahead and not spm_only
-    demand = sub.demand
-    demand_spm_only = sub.demand_spm_only
+    runahead = cfg.runahead
     cycle = 0
     for t in range(n_iters):
         s, e = starts[t], starts[t + 1]
         cycle += ii + extra[t]
         for j in range(s, e):
             if in_spm[j]:
-                stats.spm_accesses += 1
+                spm_accesses += 1
                 continue
-            a = addr[j]
+            c = cache_of[j]
+            d = l1_sets[c][acc_set[j]]
+            tg = acc_tag[j]
+            ent = d.get(tg)
             st = is_store[j]
-            if spm_only:
-                ready = demand_spm_only(a, st, cycle)
+            if ent is not None:
+                del d[tg]                 # touch: move to MRU
+                d[tg] = ent
+                if ent[1]:                # prefetched, first demand use
+                    ent[1] = False
+                    if ent[2] >= 0:
+                        pf_outcome[ent[2]] = "used"
+                    prefetch_used += 1
+                    covered += 1
+                l1_hits += 1
+                if st or ent[0] <= cycle:
+                    continue
+                ready = ent[0]            # in-flight fill: partial wait
             else:
-                ready = demand(cache_of[j], a, st, cycle, j)
+                l1_misses += 1
+                mshr = mshrs[c]
+                issue = mshr.free_at(cycle)  # stall here if MSHR exhausted
+                fill = fill_latency(c, acc_line[j], issue)
+                mshr.occupy(fill)
+                ways = l1_ways[c]
+                if ways > 0:
+                    if len(d) >= ways:
+                        victim = d.pop(next(iter(d)))
+                        if victim[1] and victim[2] >= 0:
+                            pf_outcome[victim[2]] = "evicted"
+                    d[tg] = [fill, False, -1]
+                if st:
+                    if issue <= cycle:    # store buffer absorbs the miss
+                        continue
+                    ready = issue
+                else:
+                    uncovered += 1
+                    ready = fill
             if ready > cycle:
                 if runahead:
                     run_walker(j + 1, cycle, ready, j)
-                stats.stall_cycles += ready - cycle
+                stall += ready - cycle
                 cycle = ready
     stats.cycles = cycle
+    stats.stall_cycles = stall
+    stats.spm_accesses = spm_accesses
+    stats.l1_hits = l1_hits
+    stats.l1_misses = l1_misses
+    stats.l2_hits = l2_hits
+    stats.dram_accesses = dram
+    stats.prefetch_issued = prefetch_issued
+    stats.prefetch_used = prefetch_used
+    stats.covered_misses = covered
+    stats.uncovered_misses = uncovered
+    stats.runahead_entries = runahead_entries
 
-    _classify_prefetches(trace, sub, stats)
+    _classify_prefetches(trace, cfg, pf_records, pf_outcome, stats)
 
 
-def _classify_prefetches(trace: Trace, sub: _Subsystem, stats) -> None:
-    """Fig. 15 classification: used / evicted (useful, lost) / useless."""
-    if not sub.pf_records:
+def _run_spm_only(cfg, stats, in_spm, is_store, starts, n_iters, ii) -> None:
+    """SPM-only baseline: every non-SPM access is a word-wide DRAM
+    transaction (stores absorbed by the write buffer)."""
+    latency = cfg.dram_latency
+    occupancy = max(1, 4 // max(1, cfg.dram_bus_bytes_per_cycle))
+    last_return = -10**18
+    spm_accesses = dram = stall = 0
+    cycle = 0
+    for t in range(n_iters):
+        s, e = starts[t], starts[t + 1]
+        cycle += ii
+        for j in range(s, e):
+            if in_spm[j]:
+                spm_accesses += 1
+                continue
+            dram += 1
+            ready = cycle + latency
+            if ready < last_return + occupancy:
+                ready = last_return + occupancy
+            last_return = ready
+            if not is_store[j]:
+                stall += ready - cycle
+                cycle = ready
+    stats.cycles = cycle
+    stats.stall_cycles = stall
+    stats.spm_accesses = spm_accesses
+    stats.dram_accesses = dram
+
+
+def _classify_prefetches(trace: Trace, cfg, pf_records, pf_outcome,
+                         stats) -> None:
+    """Fig. 15 classification: used / evicted (useful, lost) / useless.
+
+    A prefetch was *needed* iff the same line is demanded by the same cache
+    after the issuing trace index; ``Trace.last_line_use`` memoizes the
+    line -> last-demand-index map per (n_caches, cache, line size), so a
+    sweep of many configs over one trace builds each map once.
+    """
+    if not pf_records:
         return
-    # lines demanded after a given trace index, per cache
-    per_cache_lines: dict[int, dict[int, np.ndarray]] = {}
-    for c, l1 in enumerate(sub.l1s):
-        addrs = trace.addr // l1.cfg.line
-        mask = (trace.pe.astype(np.int64) % sub.cfg.n_caches) == c
-        idxs = np.flatnonzero(mask)
-        lines: dict[int, list[int]] = {}
-        for i in idxs:
-            lines.setdefault(int(addrs[i]), []).append(int(i))
-        per_cache_lines[c] = {k: np.asarray(v) for k, v in lines.items()}
-
-    for pf_id, (c, line, issue_idx) in enumerate(sub.pf_records):
-        outcome = sub.pf_outcome[pf_id]
+    l1cfgs = cfg.l1_configs()
+    last_use = {c: trace.last_line_use(cfg.n_caches, c, l1cfgs[c].line)
+                for c in set(r[0] for r in pf_records)}
+    for pf_id, (c, line, issue_idx) in enumerate(pf_records):
+        outcome = pf_outcome[pf_id]
         if outcome == "used":
             continue
-        future = per_cache_lines[c].get(line)
-        needed = future is not None and bool(np.any(future > issue_idx))
-        if outcome == "evicted" and needed:
-            stats.prefetch_evicted += 1
-        elif outcome == "pending" and needed:
-            # resident at end but the demand re-executed before the fill is
-            # also counted used via partial wait; remaining = end-of-kernel
+        needed = last_use[c].get(line, -1) > issue_idx
+        if needed:
+            # "evicted" lost the line before use; "pending" is resident at
+            # end of kernel but the demand never came back for it in time
             stats.prefetch_evicted += 1
         else:
             stats.prefetch_useless += 1

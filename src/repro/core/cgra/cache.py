@@ -1,14 +1,17 @@
-"""Set-associative cache models.
+"""Set-associative cache models (reference semantics).
 
 Two implementations with identical hit/miss semantics:
 
-* :class:`Cache` — the timing model used by the cycle-level simulator
-  (non-blocking via MSHR bookkeeping in the memory subsystem, LRU,
-  write-allocate, per-line fill ``ready_time`` so in-flight fills can be
-  partially waited on, prefetch-classification flags for Fig. 15).
+* :class:`Cache` — object-per-entry reference model with the full timing
+  vocabulary (LRU, write-allocate, per-line fill ``ready`` time,
+  prefetch-classification flags).  The engines themselves
+  (:mod:`._engine`, :mod:`._batch_engine`) inline this behavior as per-set
+  dicts whose insertion order is the LRU order; this class remains the
+  readable specification they are pinned against.
 * :class:`OracleCache` — a deliberately naive dict-of-lists reference used by
-  the hypothesis property tests to pin down :class:`Cache` and the vectorized
-  JAX model (``jaxcache.py``).
+  the hypothesis property tests to pin down :class:`Cache`, the engines'
+  LRU passes (``_batch_engine.lru_hit_series``) and the vectorized JAX
+  model (``jaxcache.py``).
 
 Addresses are byte addresses; a *line address* is ``addr // line``.
 """
@@ -60,7 +63,7 @@ class _Entry:
 
 
 class Cache:
-    """LRU set-associative cache (timing-model flavour)."""
+    """LRU set-associative cache (reference timing-model flavour)."""
 
     def __init__(self, cfg: CacheConfig):
         self.cfg = cfg
@@ -102,15 +105,6 @@ class Cache:
         self._use += 1
         st[tag] = _Entry(tag, self._use, ready, pf_unused, pf_id)
         return victim
-
-    def resident_unused_prefetches(self) -> list[int]:
-        """pf_ids of prefetched lines never demanded by end of simulation."""
-        out = []
-        for st in self.sets:
-            for e in st.values():
-                if e.pf_unused and e.pf_id >= 0:
-                    out.append(e.pf_id)
-        return out
 
 
 class OracleCache:

@@ -1,10 +1,17 @@
 """Cache reconfiguration (§3.4): Algorithm 1 + Time Hit Rate + the closed loop.
 
 Flow (mirrors Fig. 8): sample each L1's access stream over an observation
-window -> profile ``h_i(L_i, S_i)`` with the vectorized memory-subsystem model
-(:mod:`jaxcache`) -> pick ``H_i(S_i) = max_L h_i(L, S_i)`` -> run the
-Algorithm-1 DP to split the total cache ways -> emit a per-cache
-:class:`CacheConfig` assignment.
+window -> profile ``h_i(L_i, S_i)`` across the (ways x line) grid -> pick
+``H_i(S_i) = max_L h_i(L, S_i)`` -> run the Algorithm-1 DP to split the
+total cache ways -> emit a per-cache :class:`CacheConfig` assignment.
+
+Profiling runs on the exact stack-distance grid evaluator
+(:func:`repro.core.cgra._batch_engine.lru_miss_counts`): one capped
+LRU-stack pass per line size yields the miss count of *every* associativity
+at once, which is orders of magnitude faster on CPU than scanning each grid
+point.  The :mod:`jaxcache` ``lax.scan``/``vmap`` model remains the
+accelerator-friendly twin of the same semantics (both are pinned to
+``OracleCache`` by property tests), for profiling at TPU scale.
 
 The objective maximizes ``sum_i log H_i(S_i)`` (product of hit rates: in a
 lock-step CGRA a miss in *any* cache stalls every PE, so per-window all-hit
@@ -20,7 +27,7 @@ import itertools
 
 import numpy as np
 
-from . import jaxcache
+from . import _batch_engine
 from .cache import CacheConfig
 from .simulator import SimConfig, plan_spm
 from .trace import Trace
@@ -138,21 +145,24 @@ def sample_streams(trace: Trace, cfg: SimConfig,
 def profile_curves(streams, way_options, line_options, way_bytes: int,
                    metric: str = "time") -> np.ndarray:
     """``h[i, w, l]`` hit-rate of cache *i* with ``way_options[w]`` ways and
-    ``line_options[l]`` line bytes, from the vectorized model."""
-    grid = jaxcache.ConfigGrid.build(way_bytes, way_options, line_options)
-    n_l = len(line_options)
-    out = np.zeros((len(streams), len(way_options), n_l))
+    ``line_options[l]`` line bytes, from the exact grid evaluator.
+
+    Both metrics depend on the stream only through its miss *count* (and the
+    iteration window), so the stack-distance pass supplies the whole grid
+    without materializing per-access hit series.
+    """
+    out = np.zeros((len(streams), len(way_options), len(line_options)))
     for i, (addrs, iters) in enumerate(streams):
         if addrs.size == 0:
             out[i] = 1.0
             continue
-        hits = jaxcache.hit_series(addrs, grid)  # [C, T]
-        for c in range(len(grid)):
-            w, l = divmod(c, n_l)
-            if metric == "time":
-                out[i, w, l] = time_hit_rate(hits[c], iters)
-            else:
-                out[i, w, l] = traditional_hit_rate(hits[c])
+        misses = _batch_engine.lru_miss_counts(
+            addrs, way_options, line_options, way_bytes).astype(np.float64)
+        if metric == "time":
+            window = float(iters.max() - iters.min() + 1)
+            out[i] = np.maximum(EPS, 1.0 - misses / max(window, 1.0))
+        else:
+            out[i] = (float(addrs.size) - misses) / float(addrs.size)
     return out
 
 

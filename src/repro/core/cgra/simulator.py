@@ -21,11 +21,12 @@ L2 hit 8, L2 miss (DRAM) 80, DRAM bus service interval models the bandwidth
 pressure the paper mentions for large lines (§4.3).
 
 This module is the *orchestration* layer: configuration (:class:`SimConfig`),
-result statistics (:class:`Stats`), and the :func:`simulate` entry point.
-The stall/runahead walk itself lives in :mod:`repro.core.cgra._engine` and
-operates on the trace's precomputed array views; batch/parallel/cached
-execution over many (trace, config) points lives in
-:mod:`repro.core.cgra.sweep`.
+result statistics (:class:`Stats`), and the :func:`simulate` /
+:func:`simulate_batch` entry points.  The scalar stall/runahead walk lives
+in :mod:`repro.core.cgra._engine`; the lane-parallel batched engine (many
+configs over one trace per pass, bit-identical to the scalar walk) lives in
+:mod:`repro.core.cgra._batch_engine`; parallel/cached execution over many
+(trace, config) points lives in :mod:`repro.core.cgra.sweep`.
 """
 from __future__ import annotations
 
@@ -34,7 +35,7 @@ import dataclasses
 from .cache import CacheConfig
 from .trace import Trace, plan_spm
 
-__all__ = ["SimConfig", "Stats", "plan_spm", "simulate"]
+__all__ = ["SimConfig", "Stats", "plan_spm", "simulate", "simulate_batch"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,3 +129,19 @@ def simulate(trace: Trace, cfg: SimConfig) -> Stats:
     stats = Stats(name=trace.name)
     _engine.run(trace, cfg, stats)
     return stats
+
+
+def simulate_batch(trace: Trace, cfgs) -> list[Stats]:
+    """Run one kernel trace through many configurations in one pass.
+
+    Bit-identical to ``[simulate(trace, cfg) for cfg in cfgs]`` but far
+    faster for sweeps: non-runahead lanes advance together through the
+    batched engine (shared content phase + per-lane timing replay, with
+    vectorized SPM-only and iteration-advance fast paths); runahead lanes
+    fall back to the scalar engine per lane.
+    """
+    from . import _batch_engine
+
+    stats_list = [Stats(name=trace.name) for _ in cfgs]
+    _batch_engine.run_batch(trace, list(cfgs), stats_list)
+    return stats_list

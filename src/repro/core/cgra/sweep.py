@@ -10,10 +10,17 @@ This module turns that into a first-class operation:
   simply become unreachable and :meth:`SimCache.prune_stale` deletes them.
 * **Results persist** in ``artifacts/simcache/<key[:2]>/<key>.json`` with a
   human-readable ``index.json`` summarizing what is cached.
-* **Uncached points run in parallel** across worker processes
-  (``concurrent.futures``, spawn context, worker count auto-detected), with a
-  per-process trace memo so a sweep of N configs over one kernel builds the
-  trace once per worker, not N times.
+* **Uncached points are batched by trace**: configs swept over one trace are
+  grouped into lane batches (one batch per L1 shape, one for all SPM-only
+  baselines) and dispatched to :func:`repro.core.cgra.simulate_batch`, which
+  runs a whole batch in a single pass over the trace; runahead configs fall
+  back to the scalar engine, one task per point (``REPRO_SWEEP_ENGINE=scalar``
+  forces everything down that golden-reference path).
+* **Tasks run in parallel** across worker processes (``concurrent.futures``,
+  *fork* context — workers inherit the parent's imports copy-on-write and
+  start instantly; see :func:`_pool_context`), with a per-process trace memo
+  so the tasks of one kernel build its trace once per worker, not once per
+  task.
 
 Trace specs are picklable descriptions, never `Trace` objects:
 
@@ -28,9 +35,9 @@ Typical use (this is what ``benchmarks/common.py`` does)::
     cycles = {r.point: r.stats.cycles for r in results}
 
 §3.4 reconfiguration results are cached through the same store (kind
-``"reconfig"``) via :func:`reconfigure_cached`; those always run inline in
-the calling process because the profiler is JAX-based and must not be forked
-or re-imported per worker.
+``"reconfig"``) via :func:`reconfigure_cached`; those run inline in the
+calling process — the stack-distance profiler makes each loop fast enough
+that pool scheduling would cost more than it saves.
 """
 from __future__ import annotations
 
@@ -46,7 +53,7 @@ from concurrent.futures import ProcessPoolExecutor
 
 from . import trace as trace_mod
 from .cache import CacheConfig
-from .simulator import SimConfig, Stats, simulate
+from .simulator import SimConfig, Stats, simulate, simulate_batch
 from .trace import Trace
 
 SCHEMA_VERSION = 1
@@ -58,7 +65,7 @@ SCHEMA_VERSION = 1
 #: covered by SCHEMA_VERSION (record shape), so orchestration-only edits —
 #: pool sizing, CLI — keep the store warm.
 _SRC_FILES = ("cache.py", "trace.py", "simulator.py", "_engine.py",
-              "jaxcache.py", "reconfig.py")
+              "_batch_engine.py", "jaxcache.py", "reconfig.py")
 
 DEFAULT_ROOT = pathlib.Path(__file__).resolve().parents[4] / "artifacts" / "simcache"
 
@@ -271,6 +278,7 @@ class SweepResult:
     stats: Stats
     trace_meta: dict
     cached: bool            # True when served from the store
+    engine: str = "scalar"  # "batched" | "scalar" (what computed the stats)
 
 
 #: per-process trace memo (worker processes are reused across map chunks and
@@ -289,12 +297,45 @@ def _trace_for(spec_blob: str) -> Trace:
     return tr
 
 
-def _run_point(args: tuple[str, str]) -> tuple[dict, dict]:
-    """Worker entry: one (trace-spec JSON, SimConfig JSON) point."""
-    spec_blob, cfg_blob = args
+def _force_scalar() -> bool:
+    return os.environ.get("REPRO_SWEEP_ENGINE", "").lower() == "scalar"
+
+
+def _lane_key(cfg: SimConfig, force_scalar: bool = False):
+    """Task-grouping key: configs with equal keys become one batched task.
+
+    ``None`` means "scalar fallback, one task per point" (runahead couples
+    prefetch content to stall timing, so those lanes gain nothing from the
+    batched engine and are better spread across workers individually).
+    """
+    if force_scalar or (cfg.runahead and not cfg.spm_only):
+        return None
+    if cfg.spm_only:
+        return ("spm",)
+    return ("cache", cfg.spm_bytes, cfg.n_caches,
+            tuple((c.ways, c.line, c.way_bytes) for c in cfg.l1_configs()))
+
+
+def _run_batch(args: tuple[str, tuple[str, ...], bool]) \
+        -> tuple[list, dict, list]:
+    """Worker entry: one trace x a batch of SimConfig lanes.
+
+    ``force_scalar`` travels inside the task (resolved once in the parent):
+    pool workers are forked lazily and cached, so re-reading the environment
+    here could disagree with the parent's routing decision.
+    """
+    spec_blob, cfg_blobs, force_scalar = args
     tr = _trace_for(spec_blob)
-    stats = simulate(tr, cfg_from_json(json.loads(cfg_blob)))
-    return stats.to_dict(), trace_meta(tr)
+    cfgs = [cfg_from_json(json.loads(b)) for b in cfg_blobs]
+    if force_scalar:
+        stats = [simulate(tr, cfg) for cfg in cfgs]
+        tags = ["scalar"] * len(cfgs)
+    else:
+        from . import _batch_engine
+
+        stats = [Stats(name=tr.name) for _ in cfgs]
+        tags = _batch_engine.run_batch(tr, cfgs, stats)
+    return [s.to_dict() for s in stats], trace_meta(tr), tags
 
 
 def _auto_workers() -> int:
@@ -372,8 +413,9 @@ def sweep(points, *, store: SimCache | None = None,
 
     Results come back in input order.  Cached points are served from
     ``artifacts/simcache`` without building their traces; uncached points are
-    simulated across ``workers`` processes (auto-detected by default; 0 or 1
-    forces inline execution, also via ``REPRO_SWEEP_WORKERS``).
+    grouped into per-trace lane batches (see :func:`_lane_key`) and run
+    across ``workers`` processes (auto-detected by default; 0 or 1 forces
+    inline execution, also via ``REPRO_SWEEP_WORKERS``).
     """
     store = store if store is not None else SimCache()
     norm = []
@@ -388,32 +430,46 @@ def sweep(points, *, store: SimCache | None = None,
         if rec is not None:
             results[i] = SweepResult((spec, cfg), key,
                                      Stats.from_dict(rec["stats"]),
-                                     rec["trace_meta"], cached=True)
+                                     rec["trace_meta"], cached=True,
+                                     engine=rec.get("engine", "scalar"))
         else:
             todo.append(i)
 
     if todo:
-        # one task arg per point; sort by trace spec so map chunks land
-        # same-trace points in the same worker (per-process trace memo)
-        todo.sort(key=lambda i: json.dumps(norm[i][2], sort_keys=True))
-        args = [(json.dumps(norm[i][2], sort_keys=True),
-                 json.dumps(cfg_to_json(norm[i][1]), sort_keys=True))
-                for i in todo]
+        # group points into per-trace lane batches; runahead points stay
+        # one-per-task so the pool can spread the scalar walks
+        force_scalar = _force_scalar()   # resolved once, shipped per task
+        tasks: dict[tuple, list[int]] = {}
+        for i in todo:
+            spec_blob = json.dumps(norm[i][2], sort_keys=True)
+            lane = _lane_key(norm[i][1], force_scalar)
+            tkey = (spec_blob, lane) if lane is not None \
+                else (spec_blob, None, i)
+            tasks.setdefault(tkey, []).append(i)
+        # heaviest first: scalar runahead points, then batches by lane count
+        order = sorted(tasks.items(),
+                       key=lambda kv: (kv[0][1] is not None, -len(kv[1])))
+        args = [(tkey[0], tuple(json.dumps(cfg_to_json(norm[i][1]),
+                                           sort_keys=True) for i in idxs),
+                 force_scalar)
+                for tkey, idxs in order]
         n_workers = min(workers if workers is not None else _auto_workers(),
-                        len(todo))
+                        len(args))
         ex = _pool_for_sweep() if n_workers > 1 else None
         if ex is not None:
-            chunk = max(1, -(-len(args) // (n_workers * 4)))
-            outs = list(ex.map(_run_point, args, chunksize=chunk))
+            outs = list(ex.map(_run_batch, args, chunksize=1))
         else:
-            outs = [_run_point(a) for a in args]
-        for i, (stats_d, meta) in zip(todo, outs):
-            spec, cfg, spec_json, key = norm[i]
-            store.put(key, {"kind": "sim", "trace": spec_json,
-                            "cfg": cfg_to_json(cfg), "stats": stats_d,
-                            "trace_meta": meta}, flush_index=False)
-            results[i] = SweepResult((spec, cfg), key, Stats.from_dict(stats_d),
-                                     meta, cached=False)
+            outs = [_run_batch(a) for a in args]
+        for (tkey, idxs), (stats_ds, meta, tags) in zip(order, outs):
+            for i, stats_d, tag in zip(idxs, stats_ds, tags):
+                spec, cfg, spec_json, key = norm[i]
+                store.put(key, {"kind": "sim", "trace": spec_json,
+                                "cfg": cfg_to_json(cfg), "stats": stats_d,
+                                "engine": tag, "trace_meta": meta},
+                          flush_index=False)
+                results[i] = SweepResult((spec, cfg), key,
+                                         Stats.from_dict(stats_d), meta,
+                                         cached=False, engine=tag)
         store.flush_index()
     return [results[i] for i in range(len(norm))]
 
@@ -425,7 +481,7 @@ def simulate_cached(spec, cfg: SimConfig,
 
 
 # ---------------------------------------------------------------------------
-# Cached §3.4 reconfiguration (runs inline: the profiler is JAX-based)
+# Cached §3.4 reconfiguration (runs inline; profiling is already fast)
 # ---------------------------------------------------------------------------
 
 def reconfigure_cached(spec, cfg: SimConfig, *, window: int | None = 16_384,

@@ -118,6 +118,56 @@ class Trace:
             self._memo[key] = (self.pe.astype(np.int64) % n_caches)
         return self._memo[key]
 
+    def iter_index(self) -> np.ndarray:
+        """Per-access iteration *ordinal* (0..n_iters-1, index into
+        ``iter_starts``), unlike ``iter_id`` which is whatever the builder
+        recorded.  Lets the engines map any access to its II window."""
+        if "iter_index" not in self._memo:
+            starts = self.iter_starts()
+            sizes = np.diff(starts)
+            self._memo["iter_index"] = np.repeat(
+                np.arange(len(sizes), dtype=np.int64), sizes)
+        return self._memo["iter_index"]
+
+    def arbitration_extra(self, spm_bytes: int, n_caches: int) -> np.ndarray:
+        """Per-iteration same-cycle L1 arbitration penalty (§3.1), memoized.
+
+        The k-th same-cycle request to one L1 waits k cycles beyond the II's
+        scheduled issue slots, so an iteration pays ``max_c(count_c) - ii``
+        extra cycles when any single L1 receives more than ``ii`` non-SPM
+        requests.  Both the scalar and the batched engine consume this view,
+        so a sweep of many timing-only variants pays the bincount once.
+        """
+        key = ("extra", int(spm_bytes), int(n_caches))
+        if key not in self._memo:
+            starts = self.iter_starts()
+            n_iters = len(starts) - 1
+            if n_iters == 0 or not len(self):
+                extra = np.zeros(n_iters, dtype=np.int64)
+            else:
+                sel = ~self.spm_mask(spm_bytes)
+                key_arr = (self.iter_index()[sel] * n_caches
+                           + self.cache_index(n_caches)[sel])
+                cnt = np.bincount(key_arr, minlength=n_iters * n_caches)
+                per_iter_max = cnt.reshape(n_iters, n_caches).max(axis=1)
+                extra = np.maximum(0, per_iter_max - self.ii)
+            self._memo[key] = extra
+        return self._memo[key]
+
+    def last_line_use(self, n_caches: int, cache: int,
+                      line_bytes: int) -> dict:
+        """``line_addr -> last trace index`` for the accesses cache ``cache``
+        serves (ignoring SPM residency, like the Fig. 15 classifier), under
+        ``line_bytes`` lines.  Memoized so prefetch classification stops
+        rebuilding the per-cache line map for every simulated config."""
+        key = ("last_line", int(n_caches), int(cache), int(line_bytes))
+        if key not in self._memo:
+            idxs = np.flatnonzero(self.cache_index(n_caches) == cache)
+            lines = self.addr[idxs] // line_bytes
+            # dict() keeps the *last* assignment per key: idxs are ascending
+            self._memo[key] = dict(zip(lines.tolist(), idxs.tolist()))
+        return self._memo[key]
+
 
 def plan_spm(trace: Trace, spm_bytes: int) -> np.ndarray:
     """Compile-time SPM allocation: pin array prefixes greedily by access

@@ -1,0 +1,206 @@
+"""Unit + property tests for the timing primitives and the batched engine.
+
+The property tests run under hypothesis when it is installed and skip
+cleanly otherwise (see ``tests/hypothesis_compat.py``); the example-based
+tests below them always run, so a bare interpreter still exercises every
+invariant once.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core.cgra import _batch_engine, presets
+from repro.core.cgra._engine import _DramBus, _Mshr
+from repro.core.cgra.cache import CacheConfig, OracleCache
+from repro.core.cgra.simulator import simulate, simulate_batch
+from repro.core.cgra.trace import gcn_aggregate, radix_hist
+
+# ---------------------------------------------------------------------------
+# _DramBus
+# ---------------------------------------------------------------------------
+
+requests_strategy = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=50),     # now increment
+              st.integers(min_value=1, max_value=256)),   # nbytes
+    min_size=1, max_size=60,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(reqs=requests_strategy,
+       latency=st.integers(min_value=0, max_value=100),
+       bpc=st.integers(min_value=1, max_value=64))
+def test_dram_bus_ready_times_monotone(reqs, latency, bpc):
+    bus = _DramBus(latency, bpc)
+    now, prev = 0, None
+    for dnow, nbytes in reqs:
+        now += dnow
+        ready = bus.request(now, nbytes)
+        assert ready >= now + latency
+        if prev is not None:
+            # the return bus is serial: each fill starts after the previous
+            assert ready >= prev + max(1, nbytes // bpc)
+        prev = ready
+
+
+@settings(max_examples=40, deadline=None)
+@given(nbytes=st.integers(min_value=1, max_value=512),
+       bpc=st.integers(min_value=1, max_value=64),
+       n=st.integers(min_value=2, max_value=10))
+def test_dram_bus_back_to_back_fills_serialize(nbytes, bpc, n):
+    """Same-cycle fills drain at exactly nbytes/bytes_per_cycle apart."""
+    bus = _DramBus(latency=80, bytes_per_cycle=bpc)
+    readies = [bus.request(0, nbytes) for _ in range(n)]
+    occ = max(1, nbytes // bpc)
+    assert readies[0] == 80
+    for a, b in zip(readies, readies[1:]):
+        assert b - a == occ
+
+
+def test_dram_bus_bandwidth_cap_example():
+    bus = _DramBus(latency=80, bytes_per_cycle=16)
+    assert bus.request(0, 64) == 80          # 80 + latency
+    assert bus.request(0, 64) == 84          # 64B / 16B-per-cycle behind it
+    assert bus.request(100, 64) == 180       # idle bus: latency-bound again
+
+
+# ---------------------------------------------------------------------------
+# _Mshr
+# ---------------------------------------------------------------------------
+
+fill_pattern = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=20),     # now increment
+              st.integers(min_value=1, max_value=120)),   # fill duration
+    min_size=1, max_size=80,
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(entries=st.integers(min_value=1, max_value=8), pattern=fill_pattern)
+def test_mshr_never_exceeds_entries_outstanding(entries, pattern):
+    """Issuing at ``free_at(now)`` keeps outstanding fills <= entries."""
+    mshr = _Mshr(entries)
+    now = 0
+    outstanding: list[int] = []
+    for dnow, dur in pattern:
+        now += dnow
+        issue = mshr.free_at(now)
+        assert issue >= now
+        ready = issue + dur
+        mshr.occupy(ready)
+        outstanding.append(ready)
+        in_flight = sum(1 for r in outstanding if r > issue)
+        assert in_flight <= entries
+
+
+@settings(max_examples=60, deadline=None)
+@given(entries=st.integers(min_value=1, max_value=8), pattern=fill_pattern,
+       probes=st.lists(st.integers(min_value=0, max_value=400),
+                       min_size=2, max_size=20))
+def test_mshr_free_at_monotone_in_now(entries, pattern, probes):
+    mshr = _Mshr(entries)
+    now = 0
+    for dnow, dur in pattern:
+        now += dnow
+        mshr.occupy(mshr.free_at(now) + dur)
+    prev = None
+    for t in sorted(probes):
+        free = mshr.free_at(t)
+        assert free >= t
+        if prev is not None:
+            assert free >= prev    # later queries never free up earlier
+        prev = free
+
+
+def test_mshr_blocks_then_frees_example():
+    mshr = _Mshr(2)
+    mshr.occupy(100)
+    mshr.occupy(200)
+    assert mshr.free_at(50) == 100   # both busy: wait for the older fill
+    assert mshr.has_free(150)        # one retired
+    assert mshr.free_at(150) == 150
+
+
+# ---------------------------------------------------------------------------
+# Content-model primitives (pinned to OracleCache)
+# ---------------------------------------------------------------------------
+
+addr_strategy = st.lists(
+    st.integers(min_value=0, max_value=1 << 14), min_size=1, max_size=250)
+
+
+@settings(max_examples=60, deadline=None)
+@given(addrs=addr_strategy,
+       ways=st.integers(min_value=0, max_value=8),
+       line=st.sampled_from([16, 32, 64, 128]),
+       way_bytes=st.sampled_from([256, 512, 1024]))
+def test_lru_hit_series_matches_oracle(addrs, ways, line, way_bytes):
+    cfg = CacheConfig(ways=ways, line=line, way_bytes=way_bytes)
+    got = _batch_engine.lru_hit_series(addrs, line, cfg.sets, ways)
+    assert got.tolist() == OracleCache(cfg).run(addrs)
+
+
+@settings(max_examples=30, deadline=None)
+@given(addrs=addr_strategy, way_bytes=st.sampled_from([256, 512]))
+def test_lru_miss_counts_grid_matches_oracle(addrs, way_bytes):
+    way_opts = [0, 1, 2, 3, 5, 8]
+    line_opts = [16, 64]
+    grid = _batch_engine.lru_miss_counts(addrs, way_opts, line_opts,
+                                         way_bytes)
+    for wi, w in enumerate(way_opts):
+        for li, line in enumerate(line_opts):
+            cfg = CacheConfig(ways=w, line=line, way_bytes=way_bytes)
+            misses = sum(not h for h in OracleCache(cfg).run(addrs))
+            assert grid[wi, li] == misses, (w, line)
+
+
+def test_lru_primitives_example():
+    # one set (way_bytes == line): [A, B, A] thrashes 1 way, fits in 2
+    addrs = [0, 64, 0]
+    assert _batch_engine.lru_hit_series(addrs, 64, 1, 1).tolist() == \
+        [False, False, False]
+    assert _batch_engine.lru_hit_series(addrs, 64, 1, 2).tolist() == \
+        [False, False, True]
+    grid = _batch_engine.lru_miss_counts(addrs, [0, 1, 2], [64], 64)
+    assert grid[:, 0].tolist() == [3, 3, 2]
+
+
+# ---------------------------------------------------------------------------
+# Batched-engine plumbing
+# ---------------------------------------------------------------------------
+
+def test_run_batch_tags_and_order():
+    tr = gcn_aggregate("cora", max_edges=400)
+    cfgs = [presets.CACHE_SPM, presets.RUNAHEAD, presets.SPM_ONLY_4K,
+            dataclasses.replace(presets.CACHE_SPM, mshr=1)]
+    from repro.core.cgra.simulator import Stats
+    stats = [Stats(name=tr.name) for _ in cfgs]
+    tags = _batch_engine.run_batch(tr, cfgs, stats)
+    assert tags == ["batched", "scalar", "batched", "batched"]
+    for cfg, got in zip(cfgs, stats):
+        assert got == simulate(tr, cfg)
+
+
+def test_spm_only_lane_edge_cases():
+    tr = gcn_aggregate("cora", max_edges=300)
+    # SPM covers everything: no DRAM traffic, no stalls
+    all_spm = dataclasses.replace(presets.SPM_ONLY_4K,
+                                  spm_bytes=tr.footprint() + 4096)
+    # SPM covers nothing: every access is a word-wide DRAM transaction
+    no_spm = dataclasses.replace(presets.SPM_ONLY_4K, spm_bytes=0)
+    tight_bus = dataclasses.replace(no_spm, dram_bus_bytes_per_cycle=1)
+    for cfg in (all_spm, no_spm, tight_bus):
+        assert simulate_batch(tr, [cfg])[0] == simulate(tr, cfg)
+    batch = simulate_batch(tr, [all_spm])[0]
+    assert batch.stall_cycles == 0
+    assert batch.dram_accesses == 0
+
+
+def test_batch_handles_duplicate_configs():
+    tr = radix_hist(n=1024, n_buckets=256)
+    cfgs = [presets.CACHE_SPM, presets.CACHE_SPM, presets.CACHE_SPM]
+    ref = simulate(tr, presets.CACHE_SPM)
+    assert simulate_batch(tr, cfgs) == [ref, ref, ref]

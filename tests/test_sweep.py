@@ -5,7 +5,12 @@ The GOLDEN table pins the refactored simulator (`_engine.py` + precomputed
 produced by the original single-file `simulator.py` and must stay
 bit-identical.  Each entry is
 ``(cycles, stall_cycles, l1_hits, l1_misses, dram_accesses, prefetch_issued)``.
+
+The batched engine (`_batch_engine.py`) is pinned to the scalar engine in
+turn: full-`Stats` equality over the Table-3 grid (plus MSHR variants and
+per-cache reconfig overrides, runahead included) x paper kernels.
 """
+import dataclasses
 import json
 import os
 import subprocess
@@ -16,7 +21,7 @@ import pytest
 from repro.core.cgra import presets, simulate
 from repro.core.cgra import sweep as sw
 from repro.core.cgra.cache import CacheConfig
-from repro.core.cgra.simulator import SimConfig, Stats
+from repro.core.cgra.simulator import SimConfig, Stats, simulate_batch
 
 TRACES = {
     "gcn_cora_800": ("gcn_aggregate", {"dataset": "cora", "max_edges": 800}),
@@ -58,6 +63,64 @@ def test_engine_parity_with_seed_simulator(trace_name):
     for cfg_name, cfg in CONFIGS.items():
         got = _observed(simulate(tr, cfg))
         assert got == GOLDEN[(trace_name, cfg_name)], (trace_name, cfg_name)
+
+
+# ---------------------------------------------------------------------------
+# Batched == scalar (full-Stats parity over the Table-3 grid)
+# ---------------------------------------------------------------------------
+
+#: Table-3 columns + the axes the figure sweeps exercise: MSHR pressure,
+#: no-L2, multi-cache with heterogeneous per-cache geometry (reconfig
+#: output, including a 0-way cache), SPM-size variants, and runahead
+#: (which must fall back to the scalar walk per lane, exactly).
+PARITY_GRID = {
+    "base": presets.BASE,
+    "cache_spm": presets.CACHE_SPM,
+    "runahead": presets.RUNAHEAD,
+    "runahead_mshr2": dataclasses.replace(presets.RUNAHEAD, mshr=2),
+    "spm_only_4k": presets.SPM_ONLY_4K,
+    "spm_only_133k": presets.SPM_ONLY_133K,
+    "reconfig": presets.RECONFIG,
+    "reconfig_ra": dataclasses.replace(presets.RECONFIG, runahead=True),
+    "storage_exp": presets.STORAGE_EXP,           # no L2
+    "mshr1": dataclasses.replace(presets.CACHE_SPM, mshr=1),
+    "spm0": dataclasses.replace(presets.CACHE_SPM, spm_bytes=0),
+    "l1_per_cache": dataclasses.replace(presets.RECONFIG, l1_per_cache=(
+        CacheConfig(ways=1, line=16, way_bytes=512),
+        CacheConfig(ways=0, line=32, way_bytes=512),
+        CacheConfig(ways=8, line=128, way_bytes=512),
+        CacheConfig(ways=3, line=64, way_bytes=512))),
+}
+
+PARITY_TRACES = {
+    **TRACES,
+    "grad_3k": ("grad", {"n_cells": 2048, "n_faces": 3000}),
+    "perm_3k": ("perm_sort", {"n": 3000, "key_range": 1024}),
+    "radix_update_3k": ("radix_update", {"n": 3000, "n_buckets": 256}),
+    "src2dest_2k": ("src2dest", {"n": 2048}),
+}
+
+
+@pytest.mark.parametrize("trace_name", sorted(PARITY_TRACES))
+def test_batched_engine_matches_scalar(trace_name):
+    tr = sw.build_trace(sw.normalize_spec(PARITY_TRACES[trace_name]))
+    cfgs = list(PARITY_GRID.values())
+    batched = simulate_batch(tr, cfgs)
+    for cfg_name, cfg, got in zip(PARITY_GRID, cfgs, batched):
+        assert got == simulate(tr, cfg), (trace_name, cfg_name)
+
+
+def test_sweep_forced_scalar_matches_batched(tmp_path, monkeypatch):
+    """End-to-end: the sweep's batched dispatch and the golden scalar path
+    produce identical store records for the same points."""
+    pts = [(TRACES["radix_hist_4k"], cfg) for cfg in PARITY_GRID.values()]
+    batched = sw.sweep(pts, store=sw.SimCache(tmp_path / "b"), workers=0)
+    monkeypatch.setenv("REPRO_SWEEP_ENGINE", "scalar")
+    scalar = sw.sweep(pts, store=sw.SimCache(tmp_path / "s"), workers=0)
+    for rb, rs in zip(batched, scalar):
+        assert rb.stats == rs.stats
+        assert rb.key == rs.key
+        assert rs.engine == "scalar"
 
 
 # ---------------------------------------------------------------------------
