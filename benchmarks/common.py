@@ -42,19 +42,24 @@ _stats: dict[tuple[str, SimConfig], Stats] = {}
 _meta: dict[str, dict] = {}
 
 #: cumulative sweep accounting for ``BENCH_sim.json`` (benchmarks.run):
-#: wall-clock spent inside sweeps and per-engine point counts
+#: wall-clock spent inside sweeps, per-engine point counts, and per-engine
+#: task seconds (how the in-worker wall-clock split across the batched,
+#: runahead, and forced-scalar engines)
 SWEEP_REPORT = {"seconds": 0.0, "points": 0, "cached": 0,
-                "batched": 0, "scalar": 0}
+                "batched": 0, "runahead": 0, "scalar": 0,
+                "batched_seconds": 0.0, "runahead_seconds": 0.0,
+                "scalar_seconds": 0.0}
 
 
 def warm(points) -> None:
     """Ensure every (kernel-name, SimConfig) point is simulated + memoized.
 
     Uncached points run in one sweep — grouped into per-trace lane batches
-    for the batched engine, in parallel worker processes — and cached ones
-    are read from ``artifacts/simcache``.  Figure drivers call this with
-    their full point list before emitting rows, so a whole figure axis is
-    one batched call rather than a sequence of blocking ``simulate`` calls.
+    for the batched/runahead engines, in parallel worker processes — and
+    cached ones are read from ``artifacts/simcache``.  Figure drivers call
+    this with their full point list before emitting rows, so a whole figure
+    axis is one batched call rather than a sequence of blocking
+    ``simulate`` calls.
     """
     todo = [p for p in dict.fromkeys(points) if p not in _stats]
     if not todo:
@@ -64,7 +69,11 @@ def warm(points) -> None:
         name, cfg = r.point
         _stats[(name, cfg)] = r.stats
         _meta[name] = r.trace_meta
-        SWEEP_REPORT["cached" if r.cached else r.engine] += 1
+        if r.cached:
+            SWEEP_REPORT["cached"] += 1
+        else:
+            SWEEP_REPORT[r.engine] += 1
+            SWEEP_REPORT[r.engine + "_seconds"] += r.seconds
     SWEEP_REPORT["seconds"] += time.perf_counter() - t0
     SWEEP_REPORT["points"] += len(todo)
 

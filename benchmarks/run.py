@@ -8,11 +8,15 @@ REPRO_BENCH_QUICK=1 for a fast subset.
 Execution model: every figure driver declares its (kernel, SimConfig) sweep
 points, and this driver warms them all through the sweep engine in ONE
 parallel batch before any figure emits a row — grouped per trace into lane
-batches for the batched engine (runahead points fall back to the scalar
-walk).  Results persist in ``artifacts/simcache/``, so a re-run only
-simulates points whose kernel, configuration, or simulator source changed
-(cache-warm-incremental).  Each invocation also records sweep throughput in
-``BENCH_sim.json`` at the repo root (see :func:`write_bench_sim`).
+batches: demand points through the batched engine, runahead points through
+the speculate-and-repair runahead engine (no scalar fallback remains
+outside ``REPRO_SWEEP_ENGINE=scalar``).  Results persist in
+``artifacts/simcache/``, so a re-run only simulates points whose kernel,
+configuration, or simulator source changed (cache-warm-incremental).  Each
+invocation also records sweep throughput — including the per-engine
+wall-clock split — in ``BENCH_sim.json`` at the repo root (see
+:func:`write_bench_sim`); ``scripts/perf_guard.py`` compares a fresh record
+against the committed one in CI.
 
 The Pallas kernel microbenchmarks and the roofline pass are imported lazily
 *after* the sweep so the warm phase — and its forked worker processes —
@@ -53,7 +57,7 @@ def write_bench_sim(total_seconds: float) -> dict:
     points simulated; warm = most points read back from the simcache).
     """
     rep = dict(common.SWEEP_REPORT)
-    computed = rep["batched"] + rep["scalar"]
+    computed = rep["batched"] + rep["runahead"] + rep["scalar"]
     record = {
         "quick": common.QUICK,
         "wall_seconds": round(total_seconds, 3),
@@ -61,7 +65,11 @@ def write_bench_sim(total_seconds: float) -> dict:
         "points": rep["points"],
         "cached_points": rep["cached"],
         "batched_points": rep["batched"],
+        "runahead_points": rep["runahead"],
         "scalar_points": rep["scalar"],
+        "engines": {eng: {"points": rep[eng],
+                          "seconds": round(rep[eng + "_seconds"], 3)}
+                    for eng in ("batched", "runahead", "scalar")},
         "points_per_sec": round(rep["points"] / rep["seconds"], 2)
         if rep["seconds"] else None,
     }
@@ -82,8 +90,11 @@ def main() -> None:
     print("name,us_per_call,derived")
     t0 = time.time()
     from repro.core.cgra import sweep as sweep_engine
-    sweep_engine.ensure_pool()   # fork workers while this process is JAX-free
     pts = sweep_points()
+    # build every uncached kernel trace + engine views once in the parent,
+    # then fork: workers inherit all of it copy-on-write and never rebuild
+    sweep_engine.prewarm_traces(pts, store=common.STORE)
+    sweep_engine.ensure_pool()   # fork workers while this process is JAX-free
     common.warm(pts)
     summary = {"sweep_points": len(pts),
                "sweep_seconds": time.time() - t0}

@@ -1,0 +1,82 @@
+"""Compare a fresh ``BENCH_sim.json`` against the committed perf record.
+
+The sweep engine's throughput record (written by ``python -m
+benchmarks.run``) is committed at the repo root, so every PR carries the
+perf trajectory.  This guard re-reads a freshly produced record and warns
+when sweep throughput (``points_per_sec``) regressed by more than the
+threshold against the baseline for the same run name.
+
+Non-fatal by default: CI machines differ from the machine that produced
+the committed record, so a warning is a prompt to look, not a gate.  Pass
+``--strict`` to turn a regression into a non-zero exit (useful locally,
+where baseline and fresh records come from the same hardware).
+
+Usage (what CI does)::
+
+    cp BENCH_sim.json /tmp/bench_baseline.json     # before the benchmark
+    REPRO_BENCH_QUICK=1 python -m benchmarks.run   # rewrites BENCH_sim.json
+    python scripts/perf_guard.py --baseline /tmp/bench_baseline.json \
+        --fresh BENCH_sim.json --run cold_quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+DEFAULT_RUN = "cold_quick"
+DEFAULT_THRESHOLD = 0.30
+
+
+def load_run(path: pathlib.Path, run: str) -> dict | None:
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, ValueError) as e:
+        print(f"perf_guard: cannot read {path}: {e}")
+        return None
+    rec = doc.get("runs", {}).get(run)
+    if not isinstance(rec, dict) or not rec.get("points_per_sec"):
+        print(f"perf_guard: no usable {run!r} record in {path}")
+        return None
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_sim.json.baseline",
+                    help="committed record to compare against")
+    ap.add_argument("--fresh", default="BENCH_sim.json",
+                    help="record produced by the benchmark run just made")
+    ap.add_argument("--run", default=DEFAULT_RUN,
+                    help=f"run name to compare (default {DEFAULT_RUN})")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative points/sec drop that trips the warning "
+                         f"(default {DEFAULT_THRESHOLD:.0%})")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on regression instead of warning")
+    args = ap.parse_args(argv)
+
+    base = load_run(pathlib.Path(args.baseline), args.run)
+    fresh = load_run(pathlib.Path(args.fresh), args.run)
+    if base is None or fresh is None:
+        print("perf_guard: nothing to compare (skipping)")
+        return 0
+
+    b, f = base["points_per_sec"], fresh["points_per_sec"]
+    ratio = f / b
+    line = (f"perf_guard[{args.run}]: baseline {b} pts/s "
+            f"({base.get('points')} pts in {base.get('sweep_seconds')}s) -> "
+            f"fresh {f} pts/s ({fresh.get('points')} pts in "
+            f"{fresh.get('sweep_seconds')}s): {ratio:.2f}x")
+    if ratio < 1.0 - args.threshold:
+        # '::warning::' renders as an annotation in GitHub Actions logs
+        print(f"::warning::sweep throughput regressed >"
+              f"{args.threshold:.0%}: {line}")
+        return 1 if args.strict else 0
+    print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

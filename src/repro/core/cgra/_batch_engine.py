@@ -29,9 +29,10 @@ together:
   the walk into a running-max recurrence over bus segments; it is evaluated
   with vectorized ``maximum.reduceat`` per lane — no Python per-access loop.
 
-* **Runahead fallback**: runahead couples timing to cache content (prefetch
-  decisions depend on stall windows), so runahead lanes are delegated to the
-  scalar engine per lane.  Results are merged back in lane order.
+* **Runahead routing**: runahead couples timing to cache content (prefetch
+  decisions depend on stall windows), so runahead lanes are delegated to
+  the speculate-and-repair runahead engine (:mod:`._runahead_engine`), one
+  group per L1 shape.  Results are merged back in lane order.
 
 Everything here is pinned **bit-identical** to the scalar engine by
 `tests/test_sweep.py` (full-``Stats`` parity over the Table-3 grid x paper
@@ -147,8 +148,7 @@ class _ContentGroup:
         l1cfgs = cfg.l1_configs()
         self.l1_line = [c.line for c in l1cfgs]
 
-        mask = trace.spm_mask(cfg.spm_bytes)
-        act = np.flatnonzero(~mask)
+        act = trace.active_index(cfg.spm_bytes)
         cache_idx = trace.cache_index(n_caches)[act]
         lines_c = np.asarray(self.l1_line, dtype=np.int64)
         sets_c = np.asarray([c.sets for c in l1cfgs], dtype=np.int64)
@@ -346,8 +346,7 @@ def _spm_only_lane(trace: Trace, cfg, stats) -> None:
     n_iters = len(trace.iter_starts()) - 1
     ii = trace.ii
     stats.compute_cycles = n_iters * ii
-    mask = trace.spm_mask(cfg.spm_bytes)
-    act = np.flatnonzero(~mask)
+    act = trace.active_index(cfg.spm_bytes)
     stats.spm_accesses = int(len(trace) - act.size)
     stats.dram_accesses = int(act.size)
     if act.size == 0:
@@ -386,16 +385,18 @@ def _spm_only_lane(trace: Trace, cfg, stats) -> None:
 def run_batch(trace: Trace, cfgs, stats_list) -> list[str]:
     """Simulate every config in ``cfgs`` over ``trace``, mutating the
     matching ``stats_list`` entries.  Returns the per-lane engine tag
-    (``"batched"`` or ``"scalar"``) for reporting."""
+    (``"batched"`` or ``"runahead"``) for reporting."""
     tags = ["batched"] * len(cfgs)
     groups: dict[tuple, list[int]] = {}
+    ra_groups: dict[tuple, list[int]] = {}
     for i, cfg in enumerate(cfgs):
         if cfg.spm_only:
             _spm_only_lane(trace, cfg, stats_list[i])
         elif cfg.runahead:
-            # prefetch content depends on stall timing: no shared structure
-            _engine.run(trace, cfg, stats_list[i])
-            tags[i] = "scalar"
+            # prefetch content depends on stall timing: the runahead engine
+            # speculates each lane against a per-group reference walk
+            ra_groups.setdefault(_group_key(cfg), []).append(i)
+            tags[i] = "runahead"
         else:
             groups.setdefault(_group_key(cfg), []).append(i)
     for idxs in groups.values():
@@ -404,4 +405,10 @@ def run_batch(trace: Trace, cfgs, stats_list) -> list[str]:
             stats_list[i].compute_cycles = \
                 (len(trace.iter_starts()) - 1) * trace.ii
             group.replay(cfgs[i], stats_list[i])
+    if ra_groups:
+        from . import _runahead_engine
+
+        for idxs in ra_groups.values():
+            _runahead_engine.run_group(trace, [cfgs[i] for i in idxs],
+                                       [stats_list[i] for i in idxs])
     return tags

@@ -22,9 +22,11 @@ pre-split simulator; `tests/test_sweep.py` pins that with golden cycle
 counts, and the batched engine (:mod:`._batch_engine`) is pinned against
 this one.
 
-Lanes that need runahead run here (the walker's prefetch decisions couple
-timing to cache content, so there is no timing-independent structure to
-batch over); everything else is better served by ``_batch_engine``.
+This walk remains the golden reference for both lane-parallel engines:
+``_batch_engine`` (demand lanes, shared content phase) and
+``_runahead_engine`` (runahead lanes, speculate-and-repair over stall
+windows) are each pinned bit-identical to it.  ``REPRO_SWEEP_ENGINE=scalar``
+forces sweeps down this path.
 """
 from __future__ import annotations
 

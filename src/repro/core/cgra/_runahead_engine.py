@@ -1,0 +1,934 @@
+"""Lane-parallel runahead engine: speculate-and-repair over stall windows.
+
+Runahead execution (§3.2) is the one part of the simulator the batched
+engine (:mod:`._batch_engine`) cannot restructure: the walker's prefetch
+decisions couple cache *content* to stall *timing*, so there is no
+timing-independent content phase to share.  This module attacks the
+coupling directly.  The key observation is that a runahead run is a
+deterministic function of a small set of **timing predicates**; everything
+else — which lines the walker probes, how dummy bits propagate through
+``addr_dep`` chains, which prefetches are candidates, who gets evicted —
+is pure content, identical across lanes that share an L1 shape while the
+predicates agree.  The predicates are:
+
+* **window reach** — the walker adds ``ii`` per iteration boundary and
+  stops once it reaches the stall deadline, so a window's extent is exactly
+  ``ceil((deadline - now) / ii)`` iterations from the trigger: windows are
+  quantized by ``ii``, not by raw cycles;
+* **window alignment** — which demand events stall at all (store misses
+  stall only when the MSHR is exhausted, hits only when the line is still
+  in flight);
+* **MSHR admission** — whether a free MSHR entry exists when the walker
+  tries to issue a precise prefetch;
+* **in-flight dummy-ness** — whether a probed resident line's fill has
+  completed by the walker's quantized clock (``now + k*ii``).
+
+Execution model per (trace, ``spm_bytes``/``n_caches``/L1-geometry) group:
+
+* a **reference lane** runs the full walk once, recording per stall window
+  a compact op log (LRU touches, in-flight probes with their truth,
+  prefetch candidates with their admission verdict);
+* every **other lane** runs its *demand* walk concretely against its own
+  complete state (L1 dicts, MSHR heaps, DRAM bus, L2), but replaces each
+  walker window with verified application of the reference ops — the
+  common case, since windows are quantized by ``ii`` and fill latencies;
+* on any predicate divergence the lane **restores the window checkpoint**
+  (lazily-saved L1 sets / MSHR heaps / L2 sets / prefetch ledger) and
+  re-walks that window scalar-style; because a diverged window leaves the
+  lane's cache content off the reference trajectory, the lane then stays
+  on the true walker for the rest of the trace (its state is complete, so
+  nothing is recomputed).
+
+Both paths run on the rewritten hot loop: precomputed per-group NumPy
+columns compressed to the demand work list (non-SPM accesses) and the
+walker work list (non-SPM + SPM stores + dep-carrying accesses), with the
+stall-free cycle of every iteration precomputed as one ``cumsum`` base
+(mirroring :mod:`._batch_engine`) so event-free iterations are never
+visited.  Results are **bit-identical** to the scalar golden engine
+(:func:`repro.core.cgra._engine.run`); `tests/test_sweep.py` pins
+full-``Stats`` parity over the Table-3 grid x paper kernels and
+`tests/test_runahead_engine.py` pins the walker invariants.
+"""
+from __future__ import annotations
+
+from bisect import bisect_left as _bisect_left, bisect_right as _bisect_right, \
+    insort as _insort
+
+import numpy as np
+
+from . import _engine
+from .trace import Trace
+
+
+class _Columns:
+    """Shared preprocessing of one (trace, L1-shape, SPM-size) lane group.
+
+    Everything here is timing-independent and identical for every lane in
+    the group, so a 6-lane MSHR sweep pays the vectorized passes once.
+    """
+
+    def __init__(self, trace: Trace, cfg):
+        self.trace = trace
+        self.ii = trace.ii
+        l1cfgs = cfg.l1_configs()
+        self.n_caches = cfg.n_caches
+        self.l1_line = [c.line for c in l1cfgs]
+        self.l1_ways = [c.ways for c in l1cfgs]
+        self.l1_nsets = [c.sets for c in l1cfgs]
+
+        starts = trace.iter_starts()
+        self.starts = starts.tolist()
+        self.n_iters = len(starts) - 1
+        self.base = np.cumsum(
+            trace.arbitration_extra(cfg.spm_bytes, self.n_caches)
+            + trace.ii).tolist()
+
+        self.spm_accesses = int(np.count_nonzero(
+            trace.spm_mask(cfg.spm_bytes)))
+
+        # demand work list: non-SPM accesses, with per-iteration ranges for
+        # the non-empty iterations only (bulk-advance over the rest); the
+        # geometry-independent parts are memoized on the trace and shared
+        # by every lane group of this spm_bytes
+        al = trace.active_lists(cfg.spm_bytes)
+        self.a_j = al["a_j"]
+        self.a_store = al["a_store"]
+        self.it_rows = al["it_rows"]
+
+        # walker work list: accesses the §3.2 walker cannot skip
+        wl = trace.walker_lists(cfg.spm_bytes)
+        self.rel = wl["rel"]
+        self.w_j = self.rel
+        self.w_dep = wl["w_dep"]
+        self.w_store = wl["w_store"]
+        self.w_spm = wl["w_spm"]
+        self.w_addr = wl["w_addr"]
+        self.w_ord = wl["w_ord"]
+        self.rel_bounds = wl["rel_bounds"]
+
+        # geometry-dependent (line, set, tag, cache) columns, memoized per
+        # (spm, n_caches, L1 shape) on the trace (same-package private
+        # access): lane groups re-created across tasks — and prewarmed
+        # pre-fork by sweep.prewarm_traces — convert exactly once
+        gkey = ("ra_cols", int(cfg.spm_bytes), self.n_caches,
+                tuple((c.ways, c.line, c.way_bytes) for c in l1cfgs))
+        cols = trace._memo.get(gkey)
+        if cols is None:
+            cache_idx = trace.cache_index(self.n_caches)
+            if len({(c.line, c.sets) for c in l1cfgs}) == 1:
+                line = trace.addr // l1cfgs[0].line
+                nsets = l1cfgs[0].sets
+            else:
+                lines_c = np.asarray(self.l1_line, dtype=np.int64)
+                sets_c = np.asarray(self.l1_nsets, dtype=np.int64)
+                line = trace.addr // lines_c[cache_idx]
+                nsets = sets_c[cache_idx]
+            set_arr = line % nsets
+            tag_arr = line // nsets
+            act = trace.active_index(cfg.spm_bytes)
+            rel = trace.walker_index(cfg.spm_bytes)
+            cols = trace._memo[gkey] = {
+                "a_c": cache_idx[act].tolist(),
+                "a_set": set_arr[act].tolist(),
+                "a_tag": tag_arr[act].tolist(),
+                "a_line": line[act].tolist(),
+                "w_c": cache_idx[rel].tolist(),
+                "w_set": set_arr[rel].tolist(),
+                "w_tag": tag_arr[rel].tolist(),
+                "w_line": line[rel].tolist(),
+            }
+        self.a_c = cols["a_c"]
+        self.a_set = cols["a_set"]
+        self.a_tag = cols["a_tag"]
+        self.a_line = cols["a_line"]
+        self.w_c = cols["w_c"]
+        self.w_set = cols["w_set"]
+        self.w_tag = cols["w_tag"]
+        self.w_line = cols["w_line"]
+
+
+class _LaneState:
+    """Complete per-lane machine state (content + timing).
+
+    Holding the *full* state on every lane — not just the timing replay —
+    is what makes repair cheap: at any divergence the lane simply keeps
+    walking scalar-style from where it stands.
+    """
+
+    __slots__ = ("entries", "bus_latency", "bus_last", "l2_on", "l2_line",
+                 "l2_nsets", "l2_ways", "l2_hit_lat", "l2_occ", "l1_occ",
+                 "l1_sets", "mshr_ready", "l2_sets", "dram", "l2_hits",
+                 "prefetch_issued", "runahead_entries", "pf_records",
+                 "pf_outcome")
+
+    def __init__(self, g: _Columns, cfg):
+        self.entries = cfg.mshr
+        self.bus_latency = cfg.dram_latency
+        self.bus_last = -10**18
+        self.l2_on = cfg.l2 is not None
+        bpc = max(1, cfg.dram_bus_bytes_per_cycle)
+        if self.l2_on:
+            self.l2_line = cfg.l2.line
+            self.l2_nsets = cfg.l2.sets
+            self.l2_ways = cfg.l2.ways
+            self.l2_hit_lat = cfg.l2_hit_latency
+            self.l2_occ = max(1, self.l2_line // bpc)
+            self.l2_sets = [{} for _ in range(self.l2_nsets)]
+            self.l1_occ = None
+        else:
+            self.l2_sets = None
+            self.l1_occ = [max(1, ln // bpc) for ln in g.l1_line]
+        self.l1_sets = [[{} for _ in range(s)] for s in g.l1_nsets]
+        self.mshr_ready = [[] for _ in range(g.n_caches)]
+        self.dram = 0
+        self.l2_hits = 0
+        self.prefetch_issued = 0
+        self.runahead_entries = 0
+        # pf_records: pf_id -> (cache, line, issue trace idx); outcome in
+        # {"pending", "used", "evicted"} (see _engine._classify_prefetches)
+        self.pf_records = []
+        self.pf_outcome = []
+
+
+def snapshot_lane_l1(l1_sets) -> list:
+    """Copy of the per-cache/per-set L1 dicts (insertion order == LRU order).
+
+    Entries are shared by reference: window ops never mutate an entry list
+    in place (touch re-inserts it, install creates a new one), so restoring
+    the dicts restores content, LRU order, fill times and prefetch flags
+    exactly.  `tests/test_runahead_engine.py` pins the round trip.
+    """
+    return [[dict(d) for d in sets] for sets in l1_sets]
+
+
+def restore_lane_l1(l1_sets, snap) -> None:
+    """Put a :func:`snapshot_lane_l1` copy back into the live structure."""
+    for sets, ssets in zip(l1_sets, snap):
+        for s, d in enumerate(ssets):
+            sets[s] = dict(d)
+
+
+def _walk_window(g: _Columns, lane: _LaneState, j0: int, ord0: int, now: int,
+                 deadline: int, blocked: int, ops: list | None) -> None:
+    """True §3.2 walker for one stall window ``[now, deadline)``.
+
+    Bit-identical to ``_engine.run``'s ``run_walker`` but restructured onto
+    the precomputed walker work list: the extent is resolved up front from
+    the quantized reach (no per-access iteration branch), skippable
+    accesses are never visited, and the prefetch/MSHR/L2 machinery is
+    inlined.  When ``ops`` is a list the content-op log is recorded for the
+    follower lanes of the group.
+    """
+    lane.runahead_entries += 1
+    ii = g.ii
+    c_stop = -((now - deadline) // ii)          # ceil((deadline - now) / ii)
+    end_ord = ord0 + c_stop
+    n_iters = g.n_iters
+    if end_ord > n_iters:
+        end_ord = n_iters
+    i0 = _bisect_left(g.rel, j0)
+    i1 = g.rel_bounds[end_ord]
+    if i0 >= i1:
+        return
+
+    w_j = g.w_j
+    w_dep = g.w_dep
+    w_store = g.w_store
+    w_spm = g.w_spm
+    w_addr = g.w_addr
+    w_ord = g.w_ord
+    w_c = g.w_c
+    w_set = g.w_set
+    w_tag = g.w_tag
+    w_line = g.w_line
+    l1_sets = lane.l1_sets
+    l1_ways = g.l1_ways
+    mshr_ready = lane.mshr_ready
+    entries = lane.entries
+    pf_records = lane.pf_records
+    pf_outcome = lane.pf_outcome
+    bus_latency = lane.bus_latency
+    bus_last = lane.bus_last
+    dram = lane.dram
+    prefetch_issued = lane.prefetch_issued
+    l2_on = lane.l2_on
+    if l2_on:
+        l2_line = lane.l2_line
+        l2_nsets = lane.l2_nsets
+        l2_ways = lane.l2_ways
+        l2_hit_lat = lane.l2_hit_lat
+        l2_occ = lane.l2_occ
+        l2_sets = lane.l2_sets
+        l2_hits = lane.l2_hits
+    else:
+        l1_occ = lane.l1_occ
+    l1_line = g.l1_line
+
+    dummy = {blocked}
+    temp = set()
+    ra = now
+    last_ord = ord0
+    for widx in range(i0, i1):
+        dep = w_dep[widx]
+        if dep >= 0 and dep in dummy:
+            if not w_store[widx]:
+                dummy.add(w_j[widx])      # dummy address -> dummy value
+            continue
+        if w_spm[widx]:
+            if w_store[widx]:
+                temp.add(w_addr[widx])
+            continue
+        c = w_c[widx]
+        s = w_set[widx]
+        d = l1_sets[c][s]
+        tg = w_tag[widx]
+        ent = d.get(tg)
+        st = w_store[widx]
+        if not st:
+            if w_addr[widx] in temp:
+                continue
+            if ent is not None:
+                del d[tg]                 # probe touches resident lines
+                d[tg] = ent
+                o = w_ord[widx]
+                if o != last_ord:
+                    ra = now + (o - ord0) * ii
+                    last_ord = o
+                infl = ent[0] > ra
+                if infl:
+                    dummy.add(w_j[widx])  # in-flight: value dummy
+                if ops is not None:
+                    ops.append((1, c, s, tg, o - ord0, infl))
+                continue
+            dummy.add(w_j[widx])
+        else:
+            # redirect to temp storage + convert to prefetch-read (§3.2)
+            temp.add(w_addr[widx])
+            if ent is not None:
+                del d[tg]
+                d[tg] = ent
+                if ops is not None:
+                    ops.append((0, c, s, tg))
+                continue
+        # prefetch candidate (missing line): bounded by free MSHR entries
+        o = w_ord[widx]
+        if o != last_ord:
+            ra = now + (o - ord0) * ii
+            last_ord = o
+        rl = mshr_ready[c]
+        if rl:
+            ip = _bisect_right(rl, ra)
+            if ip:
+                del rl[:ip]
+        ln = w_line[widx]
+        if len(rl) < entries:
+            free = True
+            if l2_on:
+                l2l = (ln * l1_line[c]) // l2_line
+                d2 = l2_sets[l2l % l2_nsets]
+                tg2 = l2l // l2_nsets
+                r2 = d2.get(tg2)
+                if r2 is not None and r2 <= ra:
+                    del d2[tg2]           # touch: move to MRU
+                    d2[tg2] = r2
+                    l2_hits += 1
+                    fill = ra + l2_hit_lat
+                else:
+                    dram += 1
+                    fill = ra + bus_latency
+                    if fill < bus_last + l2_occ:
+                        fill = bus_last + l2_occ
+                    bus_last = fill
+                    if r2 is not None:    # refresh the in-flight line (MRU)
+                        del d2[tg2]
+                    elif len(d2) >= l2_ways:
+                        del d2[next(iter(d2))]
+                    d2[tg2] = fill
+            else:
+                dram += 1
+                fill = ra + bus_latency
+                if fill < bus_last + l1_occ[c]:
+                    fill = bus_last + l1_occ[c]
+                bus_last = fill
+            if rl and fill < rl[-1]:
+                _insort(rl, fill)
+            else:
+                rl.append(fill)
+            pf_id = len(pf_records)
+            pf_records.append((c, ln, w_j[widx]))
+            pf_outcome.append("pending")
+            ways = l1_ways[c]
+            if ways > 0:
+                if len(d) >= ways:
+                    victim = d.pop(next(iter(d)))
+                    if victim[1] and victim[2] >= 0:
+                        pf_outcome[victim[2]] = "evicted"
+                d[tg] = [fill, True, pf_id]
+            prefetch_issued += 1
+        else:
+            free = False
+        if ops is not None:
+            ops.append((2, c, s, tg, ln, w_j[widx], o - ord0, free))
+
+    lane.bus_last = bus_last
+    lane.dram = dram
+    lane.prefetch_issued = prefetch_issued
+    if l2_on:
+        lane.l2_hits = l2_hits
+
+
+def _walk_window_1(g: _Columns, lane: _LaneState, j0: int, ord0: int,
+                   now: int, deadline: int, blocked: int,
+                   ops: list | None) -> None:
+    """Single-cache specialization of :func:`_walk_window`.
+
+    Every per-cache subscript is hoisted, the walker clock is resolved
+    lazily (a resident line whose fill completed before the window opened
+    can never be in flight at ``now + k*ii``), and windows in which the
+    MSHR provably stays exhausted until the deadline — the entirety of an
+    ``mshr=1`` sweep lane, whose only free entry is held by the blocking
+    fill itself — skip the admission machinery per missing line.  Behavior
+    is bit-identical to the general walker; the parity grid runs both.
+    """
+    lane.runahead_entries += 1
+    ii = g.ii
+    c_stop = -((now - deadline) // ii)
+    end_ord = ord0 + c_stop
+    n_iters = g.n_iters
+    if end_ord > n_iters:
+        end_ord = n_iters
+    i0 = _bisect_left(g.rel, j0)
+    i1 = g.rel_bounds[end_ord]
+    if i0 >= i1:
+        return
+
+    w_j = g.w_j
+    w_dep = g.w_dep
+    w_store = g.w_store
+    w_spm = g.w_spm
+    w_addr = g.w_addr
+    w_ord = g.w_ord
+    w_set = g.w_set
+    w_tag = g.w_tag
+    w_line = g.w_line
+    sets0 = lane.l1_sets[0]
+    ways0 = g.l1_ways[0]
+    line0 = g.l1_line[0]
+    rl = lane.mshr_ready[0]
+    entries = lane.entries
+    pf_records = lane.pf_records
+    pf_outcome = lane.pf_outcome
+    bus_latency = lane.bus_latency
+    bus_last = lane.bus_last
+    dram = lane.dram
+    prefetch_issued = lane.prefetch_issued
+    l2_on = lane.l2_on
+    if l2_on:
+        l2_line = lane.l2_line
+        l2_nsets = lane.l2_nsets
+        l2_ways = lane.l2_ways
+        l2_hit_lat = lane.l2_hit_lat
+        l2_occ = lane.l2_occ
+        l2_sets = lane.l2_sets
+        l2_hits = lane.l2_hits
+    else:
+        occ0 = lane.l1_occ[0]
+
+    # pruning against the window-open cycle is always safe (every later
+    # query is >= now), and lets admissibility be decided once: if the
+    # (entries)-th outstanding fill only retires at/after the deadline, no
+    # prefetch can be admitted anywhere in this window
+    if rl:
+        ip = _bisect_right(rl, now)
+        if ip:
+            del rl[:ip]
+    admissible = len(rl) < entries or rl[len(rl) - entries] < deadline
+
+    dummy = {blocked}
+    temp = set()
+    ra = now
+    last_ord = ord0
+    record = ops is not None
+    for widx in range(i0, i1):
+        dep = w_dep[widx]
+        if dep >= 0 and dep in dummy:
+            if not w_store[widx]:
+                dummy.add(w_j[widx])      # dummy address -> dummy value
+            continue
+        if w_spm[widx]:
+            if w_store[widx]:
+                temp.add(w_addr[widx])
+            continue
+        s = w_set[widx]
+        d = sets0[s]
+        tg = w_tag[widx]
+        ent = d.get(tg)
+        if not w_store[widx]:
+            if w_addr[widx] in temp:
+                continue
+            if ent is not None:
+                del d[tg]                 # probe touches resident lines
+                d[tg] = ent
+                if record:
+                    o = w_ord[widx]
+                    if o != last_ord:
+                        ra = now + (o - ord0) * ii
+                        last_ord = o
+                    infl = ent[0] > ra
+                    if infl:
+                        dummy.add(w_j[widx])
+                    ops.append((1, 0, s, tg, o - ord0, infl))
+                elif ent[0] > now:        # else: fill done before the window
+                    o = w_ord[widx]
+                    if o != last_ord:
+                        ra = now + (o - ord0) * ii
+                        last_ord = o
+                    if ent[0] > ra:
+                        dummy.add(w_j[widx])
+                continue
+            dummy.add(w_j[widx])
+        else:
+            # redirect to temp storage + convert to prefetch-read (§3.2)
+            temp.add(w_addr[widx])
+            if ent is not None:
+                del d[tg]
+                d[tg] = ent
+                if record:
+                    ops.append((0, 0, s, tg))
+                continue
+        # prefetch candidate (missing line): bounded by free MSHR entries
+        if not admissible:
+            if record:
+                o = w_ord[widx]
+                ops.append((2, 0, s, tg, w_line[widx], w_j[widx],
+                            o - ord0, False))
+            continue
+        o = w_ord[widx]
+        if o != last_ord:
+            ra = now + (o - ord0) * ii
+            last_ord = o
+        if rl:
+            ip = _bisect_right(rl, ra)
+            if ip:
+                del rl[:ip]
+        ln = w_line[widx]
+        if len(rl) < entries:
+            free = True
+            if l2_on:
+                l2l = (ln * line0) // l2_line
+                d2 = l2_sets[l2l % l2_nsets]
+                tg2 = l2l // l2_nsets
+                r2 = d2.get(tg2)
+                if r2 is not None and r2 <= ra:
+                    del d2[tg2]           # touch: move to MRU
+                    d2[tg2] = r2
+                    l2_hits += 1
+                    fill = ra + l2_hit_lat
+                else:
+                    dram += 1
+                    fill = ra + bus_latency
+                    if fill < bus_last + l2_occ:
+                        fill = bus_last + l2_occ
+                    bus_last = fill
+                    if r2 is not None:    # refresh the in-flight line (MRU)
+                        del d2[tg2]
+                    elif len(d2) >= l2_ways:
+                        del d2[next(iter(d2))]
+                    d2[tg2] = fill
+            else:
+                dram += 1
+                fill = ra + bus_latency
+                if fill < bus_last + occ0:
+                    fill = bus_last + occ0
+                bus_last = fill
+            if rl and fill < rl[-1]:
+                _insort(rl, fill)
+            else:
+                rl.append(fill)
+            pf_id = len(pf_records)
+            pf_records.append((0, ln, w_j[widx]))
+            pf_outcome.append("pending")
+            if ways0 > 0:
+                if len(d) >= ways0:
+                    victim = d.pop(next(iter(d)))
+                    if victim[1] and victim[2] >= 0:
+                        pf_outcome[victim[2]] = "evicted"
+                d[tg] = [fill, True, pf_id]
+            prefetch_issued += 1
+        else:
+            free = False
+        if record:
+            ops.append((2, 0, s, tg, ln, w_j[widx], o - ord0, free))
+
+    lane.bus_last = bus_last
+    lane.dram = dram
+    lane.prefetch_issued = prefetch_issued
+    if l2_on:
+        lane.l2_hits = l2_hits
+
+
+def _apply_window(g: _Columns, lane: _LaneState, win: tuple, now: int,
+                  deadline: int) -> bool:
+    """Speculatively apply a reference window's op log to ``lane``.
+
+    Verifies every timing predicate against the lane's own state; on the
+    first divergence the lazily-saved checkpoint (touched L1 sets, MSHR
+    heaps, L2 sets, bus/counters, prefetch ledger) is restored and False
+    is returned so the caller re-walks the window scalar-style.
+    """
+    trigger, c_stop_ref, ops = win
+    ii = g.ii
+    if -((now - deadline) // ii) != c_stop_ref:
+        return False                      # different quantized reach
+
+    l1_sets = lane.l1_sets
+    l1_ways = g.l1_ways
+    l1_line = g.l1_line
+    mshr_ready = lane.mshr_ready
+    entries = lane.entries
+    pf_records = lane.pf_records
+    pf_outcome = lane.pf_outcome
+    bus_latency = lane.bus_latency
+    l2_on = lane.l2_on
+    if l2_on:
+        l2_line = lane.l2_line
+        l2_nsets = lane.l2_nsets
+        l2_ways = lane.l2_ways
+        l2_hit_lat = lane.l2_hit_lat
+        l2_occ = lane.l2_occ
+        l2_sets = lane.l2_sets
+    else:
+        l1_occ = lane.l1_occ
+
+    saved_l1: dict = {}
+    saved_mshr: dict = {}
+    saved_l2: dict = {}
+    journal: list = []
+    bus0 = lane.bus_last
+    dram0 = lane.dram
+    l2h0 = lane.l2_hits
+    pfi0 = lane.prefetch_issued
+    pfn = len(pf_records)
+    bus_last = bus0
+    dram = dram0
+    l2_hits = l2h0
+    prefetch_issued = pfi0
+    ok = True
+
+    for op in ops:
+        k = op[0]
+        if k != 2:
+            c, s, tg = op[1], op[2], op[3]
+            d = l1_sets[c][s]
+            ent = d.get(tg)
+            if ent is None:
+                ok = False                # content drift (defensive)
+                break
+            if k == 1 and (ent[0] > now + op[4] * ii) != op[5]:
+                ok = False                # in-flight dummy-ness diverges
+                break
+            key = (c, s)
+            if key not in saved_l1:
+                saved_l1[key] = dict(d)
+            del d[tg]
+            d[tg] = ent
+            continue
+        _, c, s, tg, ln, j2, dord, accepted = op
+        ra = now + dord * ii
+        rl = mshr_ready[c]
+        if c not in saved_mshr:
+            saved_mshr[c] = rl[:]
+        if rl:
+            ip = _bisect_right(rl, ra)
+            if ip:
+                del rl[:ip]
+        if (len(rl) < entries) != accepted:
+            ok = False                    # MSHR admission diverges
+            break
+        if not accepted:
+            continue
+        d = l1_sets[c][s]
+        key = (c, s)
+        if key not in saved_l1:
+            saved_l1[key] = dict(d)
+        if l2_on:
+            l2l = (ln * l1_line[c]) // l2_line
+            s2 = l2l % l2_nsets
+            d2 = l2_sets[s2]
+            if s2 not in saved_l2:
+                saved_l2[s2] = dict(d2)
+            tg2 = l2l // l2_nsets
+            r2 = d2.get(tg2)
+            if r2 is not None and r2 <= ra:
+                del d2[tg2]
+                d2[tg2] = r2
+                l2_hits += 1
+                fill = ra + l2_hit_lat
+            else:
+                dram += 1
+                fill = ra + bus_latency
+                if fill < bus_last + l2_occ:
+                    fill = bus_last + l2_occ
+                bus_last = fill
+                if r2 is not None:
+                    del d2[tg2]
+                elif len(d2) >= l2_ways:
+                    del d2[next(iter(d2))]
+                d2[tg2] = fill
+        else:
+            dram += 1
+            fill = ra + bus_latency
+            if fill < bus_last + l1_occ[c]:
+                fill = bus_last + l1_occ[c]
+            bus_last = fill
+        if rl and fill < rl[-1]:
+            _insort(rl, fill)
+        else:
+            rl.append(fill)
+        pf_id = len(pf_records)
+        pf_records.append((c, ln, j2))
+        pf_outcome.append("pending")
+        ways = l1_ways[c]
+        if ways > 0:
+            if len(d) >= ways:
+                victim = d.pop(next(iter(d)))
+                if victim[1] and victim[2] >= 0:
+                    journal.append((victim[2], pf_outcome[victim[2]]))
+                    pf_outcome[victim[2]] = "evicted"
+            d[tg] = [fill, True, pf_id]
+        prefetch_issued += 1
+
+    if ok:
+        lane.bus_last = bus_last
+        lane.dram = dram
+        lane.l2_hits = l2_hits
+        lane.prefetch_issued = prefetch_issued
+        lane.runahead_entries += 1
+        return True
+
+    # repair: restore the checkpoint; caller re-walks this window
+    for (c, s), dcopy in saved_l1.items():
+        l1_sets[c][s] = dcopy
+    for c, rlcopy in saved_mshr.items():
+        mshr_ready[c] = rlcopy
+    for s2, dcopy in saved_l2.items():
+        l2_sets[s2] = dcopy
+    for vid, old in reversed(journal):
+        pf_outcome[vid] = old
+    del pf_records[pfn:]
+    del pf_outcome[pfn:]
+    return False
+
+
+def _run_lane(g: _Columns, cfg, stats, record: list | None = None,
+              log: list | None = None) -> dict:
+    """Run one runahead lane over the shared columns, mutating ``stats``.
+
+    ``record`` — list to fill with per-window op logs (reference lane);
+    ``log`` — a reference log to speculate against (follower lane).
+    Returns a diagnostics dict (speculated/walked window counts and where
+    the lane left the reference trajectory, if it did).
+    """
+    lane = _LaneState(g, cfg)
+    n_iters = g.n_iters
+    ii = g.ii
+    stats.compute_cycles = n_iters * ii
+
+    a_j = g.a_j
+    a_c = g.a_c
+    a_set = g.a_set
+    a_tag = g.a_tag
+    a_line = g.a_line
+    a_store = g.a_store
+    starts = g.starts
+    base = g.base
+    l1_sets = lane.l1_sets
+    l1_ways = g.l1_ways
+    l1_line = g.l1_line
+    mshr_ready = lane.mshr_ready
+    entries = lane.entries
+    pf_outcome = lane.pf_outcome
+    bus_latency = lane.bus_latency
+    l2_on = lane.l2_on
+    if l2_on:
+        l2_line = lane.l2_line
+        l2_nsets = lane.l2_nsets
+        l2_ways = lane.l2_ways
+        l2_hit_lat = lane.l2_hit_lat
+        l2_occ = lane.l2_occ
+        l2_sets = lane.l2_sets
+    else:
+        l1_occ = lane.l1_occ
+
+    walk = _walk_window_1 if g.n_caches == 1 else _walk_window
+    speculating = log is not None
+    n_log = len(log) if speculating else 0
+    win_i = 0
+    next_trigger = log[0][0] if n_log else -1
+    diverged_at = None
+    applied_windows = 0
+
+    S = 0
+    stall = 0
+    l1_hits = l1_misses = uncovered = covered = prefetch_used = 0
+
+    for t, lo, hi in g.it_rows:
+        now = base[t] + S
+        for idx in range(lo, hi):
+            c = a_c[idx]
+            d = l1_sets[c][a_set[idx]]
+            tg = a_tag[idx]
+            ent = d.get(tg)
+            st = a_store[idx]
+            if ent is not None:
+                del d[tg]                 # touch: move to MRU
+                d[tg] = ent
+                if ent[1]:                # prefetched, first demand use
+                    ent[1] = False
+                    if ent[2] >= 0:
+                        pf_outcome[ent[2]] = "used"
+                    prefetch_used += 1
+                    covered += 1
+                l1_hits += 1
+                if st or ent[0] <= now:
+                    if speculating and a_j[idx] == next_trigger:
+                        speculating = False       # reference stalled here
+                        diverged_at = next_trigger
+                    continue
+                ready = ent[0]            # in-flight fill: partial wait
+            else:
+                l1_misses += 1
+                rl = mshr_ready[c]
+                if rl:
+                    ip = _bisect_right(rl, now)
+                    if ip:
+                        del rl[:ip]
+                # stall here if MSHR exhausted
+                issue = now if len(rl) < entries else rl[len(rl) - entries]
+                ln = a_line[idx]
+                if l2_on:
+                    l2l = (ln * l1_line[c]) // l2_line
+                    d2 = l2_sets[l2l % l2_nsets]
+                    tg2 = l2l // l2_nsets
+                    r2 = d2.get(tg2)
+                    if r2 is not None and r2 <= issue:
+                        del d2[tg2]
+                        d2[tg2] = r2
+                        lane.l2_hits += 1
+                        fill = issue + l2_hit_lat
+                    else:
+                        lane.dram += 1
+                        fill = issue + bus_latency
+                        if fill < lane.bus_last + l2_occ:
+                            fill = lane.bus_last + l2_occ
+                        lane.bus_last = fill
+                        if r2 is not None:
+                            del d2[tg2]
+                        elif len(d2) >= l2_ways:
+                            del d2[next(iter(d2))]
+                        d2[tg2] = fill
+                else:
+                    lane.dram += 1
+                    fill = issue + bus_latency
+                    if fill < lane.bus_last + l1_occ[c]:
+                        fill = lane.bus_last + l1_occ[c]
+                    lane.bus_last = fill
+                if rl and fill < rl[-1]:
+                    _insort(rl, fill)
+                else:
+                    rl.append(fill)
+                ways = l1_ways[c]
+                if ways > 0:
+                    if len(d) >= ways:
+                        victim = d.pop(next(iter(d)))
+                        if victim[1] and victim[2] >= 0:
+                            pf_outcome[victim[2]] = "evicted"
+                    d[tg] = [fill, False, -1]
+                if st:
+                    if issue <= now:      # store buffer absorbs the miss
+                        if speculating and a_j[idx] == next_trigger:
+                            speculating = False
+                            diverged_at = next_trigger
+                        continue
+                    ready = issue
+                else:
+                    uncovered += 1
+                    ready = fill
+            if ready > now:
+                j = a_j[idx]
+                j0 = j + 1
+                ord0 = t if j0 < starts[t + 1] else t + 1
+                if speculating:
+                    win = log[win_i] if win_i < n_log else None
+                    if win is not None and win[0] == j:
+                        applied = _apply_window(g, lane, win, now, ready)
+                        win_i += 1
+                        next_trigger = log[win_i][0] if win_i < n_log else -1
+                        if applied:
+                            applied_windows += 1
+                        else:
+                            speculating = False
+                            diverged_at = j
+                            walk(g, lane, j0, ord0, now, ready, j, None)
+                    else:
+                        speculating = False       # lane stalls, ref didn't
+                        diverged_at = j
+                        walk(g, lane, j0, ord0, now, ready, j, None)
+                else:
+                    ops = None
+                    if record is not None:
+                        ops = []
+                        record.append((j, -((now - ready) // ii), ops))
+                    walk(g, lane, j0, ord0, now, ready, j, ops)
+                stall += ready - now
+                S = ready - base[t]
+                now = ready
+            elif speculating and a_j[idx] == next_trigger:
+                speculating = False
+                diverged_at = a_j[idx]
+
+    stats.cycles = (base[n_iters - 1] + S) if n_iters else 0
+    stats.stall_cycles = stall
+    stats.spm_accesses = g.spm_accesses
+    stats.l1_hits = l1_hits
+    stats.l1_misses = l1_misses
+    stats.l2_hits = lane.l2_hits
+    stats.dram_accesses = lane.dram
+    stats.prefetch_issued = lane.prefetch_issued
+    stats.prefetch_used = prefetch_used
+    stats.covered_misses = covered
+    stats.uncovered_misses = uncovered
+    stats.runahead_entries = lane.runahead_entries
+
+    _engine._classify_prefetches(g.trace, cfg, lane.pf_records,
+                                 lane.pf_outcome, stats)
+    return {"applied_windows": applied_windows,
+            "walked_windows": lane.runahead_entries - applied_windows,
+            "diverged_at": diverged_at}
+
+
+def _reference_lane(cfgs) -> int:
+    """Pick the group's reference: the most permissive MSHR (fewest
+    admission rejections), ties broken by input order.  Lanes with laxer
+    timing than the reference tend to agree on every window; tighter lanes
+    diverge at their first pressure point and continue scalar from there.
+    """
+    return max(range(len(cfgs)), key=lambda i: (cfgs[i].mshr, -i))
+
+
+def run_group(trace: Trace, cfgs, stats_list) -> list[dict]:
+    """Simulate a group of runahead lanes sharing one L1 shape over
+    ``trace``, mutating the matching ``stats_list`` entries.  Returns the
+    per-lane diagnostics (window speculation counts, divergence point).
+    """
+    g = _Columns(trace, cfgs[0])
+    if len(cfgs) == 1:
+        return [_run_lane(g, cfgs[0], stats_list[0])]
+    diags: list = [None] * len(cfgs)
+    ref = _reference_lane(cfgs)
+    log: list = []
+    diags[ref] = _run_lane(g, cfgs[ref], stats_list[ref], record=log)
+    for i, cfg in enumerate(cfgs):
+        if i != ref:
+            diags[i] = _run_lane(g, cfg, stats_list[i], log=log)
+    return diags

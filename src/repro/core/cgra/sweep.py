@@ -12,15 +12,20 @@ This module turns that into a first-class operation:
   human-readable ``index.json`` summarizing what is cached.
 * **Uncached points are batched by trace**: configs swept over one trace are
   grouped into lane batches (one batch per L1 shape, one for all SPM-only
-  baselines) and dispatched to :func:`repro.core.cgra.simulate_batch`, which
-  runs a whole batch in a single pass over the trace; runahead configs fall
-  back to the scalar engine, one task per point (``REPRO_SWEEP_ENGINE=scalar``
-  forces everything down that golden-reference path).
+  baselines, one per L1 shape for runahead configs) and dispatched to
+  :func:`repro.core.cgra.simulate_batch`, which runs a whole batch in a
+  single pass over the trace — non-runahead lanes through the batched
+  engine, runahead lanes through the speculate-and-repair runahead engine
+  (``REPRO_SWEEP_ENGINE=scalar`` forces everything down the golden
+  one-task-per-point scalar path instead).
 * **Tasks run in parallel** across worker processes (``concurrent.futures``,
   *fork* context — workers inherit the parent's imports copy-on-write and
   start instantly; see :func:`_pool_context`), with a per-process trace memo
   so the tasks of one kernel build its trace once per worker, not once per
-  task.
+  task.  Tasks are ordered trace-major (heaviest trace first, heaviest lane
+  batch first within a trace) so the handful of traces in flight at any
+  moment stays within the worker memo and no worker rebuilds a trace it
+  just evicted.
 
 Trace specs are picklable descriptions, never `Trace` objects:
 
@@ -65,7 +70,8 @@ SCHEMA_VERSION = 1
 #: covered by SCHEMA_VERSION (record shape), so orchestration-only edits —
 #: pool sizing, CLI — keep the store warm.
 _SRC_FILES = ("cache.py", "trace.py", "simulator.py", "_engine.py",
-              "_batch_engine.py", "jaxcache.py", "reconfig.py")
+              "_batch_engine.py", "_runahead_engine.py", "jaxcache.py",
+              "reconfig.py")
 
 DEFAULT_ROOT = pathlib.Path(__file__).resolve().parents[4] / "artifacts" / "simcache"
 
@@ -278,14 +284,15 @@ class SweepResult:
     stats: Stats
     trace_meta: dict
     cached: bool            # True when served from the store
-    engine: str = "scalar"  # "batched" | "scalar" (what computed the stats)
+    engine: str = "scalar"  # "batched" | "runahead" | "scalar"
+    seconds: float = 0.0    # this point's share of its task's wall-clock
 
 
 #: per-process trace memo (worker processes are reused across map chunks and
 #: across sweeps); bounded because a full-size trace plus its precomputed
 #: list views can reach tens of MB
 _worker_traces: dict[str, Trace] = {}
-_WORKER_TRACE_CAP = 4
+_WORKER_TRACE_CAP = 12
 
 
 def _trace_for(spec_blob: str) -> Trace:
@@ -297,6 +304,45 @@ def _trace_for(spec_blob: str) -> Trace:
     return tr
 
 
+def prewarm_traces(points, store: SimCache | None = None) -> int:
+    """Build traces (and their engine views) into the process-local memo.
+
+    ``points`` are (trace-spec, SimConfig) pairs as given to :func:`sweep`.
+    Called by drivers *before* :func:`ensure_pool`: under the fork start
+    method every worker inherits the parent's built traces — including the
+    memoized demand/walker work lists the engines derive per SPM size —
+    copy-on-write, so no worker rebuilds any of it mid-sweep.  Returns how
+    many traces were built.  (Beyond-cap specs still build on demand in
+    the workers; the memo keeps the most recent ``_WORKER_TRACE_CAP``.)
+
+    With a ``store``, points already cached there are skipped, so a warm
+    re-run builds nothing and goes straight to reading results back.
+    """
+    built: set[str] = set()
+    for spec, cfg in points:
+        spec_json = normalize_spec(spec)
+        if store is not None and store.get(point_key(spec_json, cfg)) \
+                is not None:
+            continue
+        blob = json.dumps(spec_json, sort_keys=True)
+        if blob not in _worker_traces:
+            built.add(blob)
+        tr = _trace_for(blob)
+        tr.as_lists()
+        tr.iter_starts()
+        tr.iter_index()
+        tr.cache_index(cfg.n_caches)
+        tr.arbitration_extra(cfg.spm_bytes, cfg.n_caches)
+        tr.active_index(cfg.spm_bytes)
+        if cfg.runahead and not cfg.spm_only:
+            from . import _runahead_engine
+
+            # building the column group warms every runahead-engine memo
+            # (work lists + per-geometry line/set/tag columns)
+            _runahead_engine._Columns(tr, cfg)
+    return len(built)
+
+
 def _force_scalar() -> bool:
     return os.environ.get("REPRO_SWEEP_ENGINE", "").lower() == "scalar"
 
@@ -304,27 +350,39 @@ def _force_scalar() -> bool:
 def _lane_key(cfg: SimConfig, force_scalar: bool = False):
     """Task-grouping key: configs with equal keys become one batched task.
 
-    ``None`` means "scalar fallback, one task per point" (runahead couples
-    prefetch content to stall timing, so those lanes gain nothing from the
-    batched engine and are better spread across workers individually).
+    ``None`` means "scalar fallback, one task per point" — only the forced
+    golden-reference path (``REPRO_SWEEP_ENGINE=scalar``) uses it now.
+    Runahead configs group per L1 shape just like demand configs: the
+    runahead engine advances such a lane batch in one pass over the trace
+    (reference walk + speculate-and-repair replays).
     """
-    if force_scalar or (cfg.runahead and not cfg.spm_only):
+    if force_scalar:
         return None
     if cfg.spm_only:
         return ("spm",)
+    if cfg.runahead:
+        # one task carries every runahead lane of the trace; the runahead
+        # engine re-groups per L1 shape internally, and a single task means
+        # the worker builds the trace and its walker views exactly once
+        return ("ra",)
     return ("cache", cfg.spm_bytes, cfg.n_caches,
             tuple((c.ways, c.line, c.way_bytes) for c in cfg.l1_configs()))
 
 
 def _run_batch(args: tuple[str, tuple[str, ...], bool]) \
-        -> tuple[list, dict, list]:
+        -> tuple[list, dict, list, float]:
     """Worker entry: one trace x a batch of SimConfig lanes.
 
     ``force_scalar`` travels inside the task (resolved once in the parent):
     pool workers are forked lazily and cached, so re-reading the environment
-    here could disagree with the parent's routing decision.
+    here could disagree with the parent's routing decision.  The returned
+    wall-clock covers the whole task (trace build included) so the caller
+    can attribute sweep time to engines (``BENCH_sim.json``).
     """
+    import time
+
     spec_blob, cfg_blobs, force_scalar = args
+    t0 = time.perf_counter()
     tr = _trace_for(spec_blob)
     cfgs = [cfg_from_json(json.loads(b)) for b in cfg_blobs]
     if force_scalar:
@@ -335,7 +393,8 @@ def _run_batch(args: tuple[str, tuple[str, ...], bool]) \
 
         stats = [Stats(name=tr.name) for _ in cfgs]
         tags = _batch_engine.run_batch(tr, cfgs, stats)
-    return [s.to_dict() for s in stats], trace_meta(tr), tags
+    return ([s.to_dict() for s in stats], trace_meta(tr), tags,
+            time.perf_counter() - t0)
 
 
 def _auto_workers() -> int:
@@ -412,10 +471,11 @@ def sweep(points, *, store: SimCache | None = None,
     """Run every (trace-spec, SimConfig) point, in parallel, through the store.
 
     Results come back in input order.  Cached points are served from
-    ``artifacts/simcache`` without building their traces; uncached points are
-    grouped into per-trace lane batches (see :func:`_lane_key`) and run
-    across ``workers`` processes (auto-detected by default; 0 or 1 forces
-    inline execution, also via ``REPRO_SWEEP_WORKERS``).
+    ``artifacts/simcache`` without building their traces; uncached points —
+    runahead included — are grouped into per-trace lane batches (see
+    :func:`_lane_key`) and run across ``workers`` processes (auto-detected
+    by default; 0 or 1 forces inline execution, also via
+    ``REPRO_SWEEP_WORKERS``).
     """
     store = store if store is not None else SimCache()
     norm = []
@@ -436,19 +496,29 @@ def sweep(points, *, store: SimCache | None = None,
             todo.append(i)
 
     if todo:
-        # group points into per-trace lane batches; runahead points stay
-        # one-per-task so the pool can spread the scalar walks
+        # group points into per-trace lane batches (runahead points group
+        # per L1 shape too; only the forced scalar path is one-per-task)
         force_scalar = _force_scalar()   # resolved once, shipped per task
         tasks: dict[tuple, list[int]] = {}
+        trace_points: dict[str, int] = {}
         for i in todo:
             spec_blob = json.dumps(norm[i][2], sort_keys=True)
             lane = _lane_key(norm[i][1], force_scalar)
             tkey = (spec_blob, lane) if lane is not None \
                 else (spec_blob, None, i)
             tasks.setdefault(tkey, []).append(i)
-        # heaviest first: scalar runahead points, then batches by lane count
-        order = sorted(tasks.items(),
-                       key=lambda kv: (kv[0][1] is not None, -len(kv[1])))
+            trace_points[spec_blob] = trace_points.get(spec_blob, 0) + 1
+        # trace-major, heaviest first: all tasks of the heaviest trace come
+        # first (runahead batches before demand batches, larger batches
+        # first), so the worker trace memos see a few traces at a time and
+        # the big traces are not left as stragglers
+        def _task_order(kv):
+            tkey, idxs = kv
+            lane = tkey[1]
+            is_ra = lane is not None and lane[0] == "ra"
+            return (-trace_points[tkey[0]], tkey[0], not is_ra, -len(idxs))
+
+        order = sorted(tasks.items(), key=_task_order)
         args = [(tkey[0], tuple(json.dumps(cfg_to_json(norm[i][1]),
                                            sort_keys=True) for i in idxs),
                  force_scalar)
@@ -460,7 +530,8 @@ def sweep(points, *, store: SimCache | None = None,
             outs = list(ex.map(_run_batch, args, chunksize=1))
         else:
             outs = [_run_batch(a) for a in args]
-        for (tkey, idxs), (stats_ds, meta, tags) in zip(order, outs):
+        for (tkey, idxs), (stats_ds, meta, tags, secs) in zip(order, outs):
+            share = secs / max(1, len(idxs))
             for i, stats_d, tag in zip(idxs, stats_ds, tags):
                 spec, cfg, spec_json, key = norm[i]
                 store.put(key, {"kind": "sim", "trace": spec_json,
@@ -469,7 +540,8 @@ def sweep(points, *, store: SimCache | None = None,
                           flush_index=False)
                 results[i] = SweepResult((spec, cfg), key,
                                          Stats.from_dict(stats_d), meta,
-                                         cached=False, engine=tag)
+                                         cached=False, engine=tag,
+                                         seconds=share)
         store.flush_index()
     return [results[i] for i in range(len(norm))]
 

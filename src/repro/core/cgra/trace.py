@@ -154,6 +154,72 @@ class Trace:
             self._memo[key] = extra
         return self._memo[key]
 
+    def active_index(self, spm_bytes: int) -> np.ndarray:
+        """Indices of non-SPM accesses (the demand engines' work list).
+
+        Both the batched engine's content phase and the runahead engine's
+        demand walk iterate only these accesses; memoizing the
+        ``flatnonzero`` keeps a sweep of many same-SPM configs from
+        re-deriving it per lane group."""
+        key = ("act", int(spm_bytes))
+        if key not in self._memo:
+            self._memo[key] = np.flatnonzero(~self.spm_mask(spm_bytes))
+        return self._memo[key]
+
+    def walker_index(self, spm_bytes: int) -> np.ndarray:
+        """Indices the §3.2 runahead walker must visit under ``spm_bytes``.
+
+        The walker can skip an access only when it is an SPM **load with no
+        address dependence**: SPM stores redirect to temporary storage,
+        dep-carrying accesses propagate dummy bits, and every non-SPM access
+        probes the L1.  Everything else is walker-relevant."""
+        key = ("walk", int(spm_bytes))
+        if key not in self._memo:
+            mask = self.spm_mask(spm_bytes)
+            self._memo[key] = np.flatnonzero(
+                ~mask | self.is_store | (self.addr_dep >= 0))
+        return self._memo[key]
+
+    def active_lists(self, spm_bytes: int) -> dict:
+        """Memoized plain-list views of the demand work list: trace indices
+        and store flags of non-SPM accesses, plus ``(iteration, lo, hi)``
+        rows for the iterations that have any demand work (the runahead
+        engine's bulk-advance structure).  Geometry-independent, so every
+        lane group of one ``spm_bytes`` shares a single conversion."""
+        key = ("act_lists", int(spm_bytes))
+        if key not in self._memo:
+            act = self.active_index(spm_bytes)
+            bounds = np.searchsorted(act, self.iter_starts())
+            lo, hi = bounds[:-1], bounds[1:]
+            ne = np.flatnonzero(hi > lo)
+            self._memo[key] = {
+                "a_j": act.tolist(),
+                "a_store": self.is_store[act].tolist(),
+                "it_rows": list(zip(ne.tolist(), lo[ne].tolist(),
+                                    hi[ne].tolist())),
+            }
+        return self._memo[key]
+
+    def walker_lists(self, spm_bytes: int) -> dict:
+        """Memoized plain-list views over :meth:`walker_index` (trace
+        indices, deps, store/SPM flags, addresses, iteration ordinals, and
+        per-iteration bounds).  Geometry-independent for the same reason as
+        :meth:`active_lists`."""
+        key = ("walk_lists", int(spm_bytes))
+        if key not in self._memo:
+            rel = self.walker_index(spm_bytes)
+            self._memo[key] = {
+                "rel": rel.tolist(),
+                "w_dep": self.addr_dep[rel].tolist(),
+                "w_store": self.is_store[rel].tolist(),
+                "w_spm": self.spm_mask(spm_bytes)[rel].tolist(),
+                "w_addr": self.addr[rel].tolist(),
+                "w_ord": self.iter_index()[rel].tolist(),
+                "rel_bounds": np.searchsorted(rel,
+                                              self.iter_starts()).tolist(),
+            }
+        return self._memo[key]
+
     def last_line_use(self, n_caches: int, cache: int,
                       line_bytes: int) -> dict:
         """``line_addr -> last trace index`` for the accesses cache ``cache``

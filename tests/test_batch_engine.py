@@ -179,7 +179,7 @@ def test_run_batch_tags_and_order():
     from repro.core.cgra.simulator import Stats
     stats = [Stats(name=tr.name) for _ in cfgs]
     tags = _batch_engine.run_batch(tr, cfgs, stats)
-    assert tags == ["batched", "scalar", "batched", "batched"]
+    assert tags == ["batched", "runahead", "batched", "batched"]
     for cfg, got in zip(cfgs, stats):
         assert got == simulate(tr, cfg)
 

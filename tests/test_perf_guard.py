@@ -1,0 +1,53 @@
+"""Unit tests for the CI sweep-throughput guard (scripts/perf_guard.py)."""
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "scripts"))
+
+import perf_guard
+
+
+def _write(path, pps, run="cold_quick"):
+    path.write_text(json.dumps(
+        {"schema": 1, "runs": {run: {"points_per_sec": pps, "points": 88,
+                                     "sweep_seconds": 10.0}}}))
+
+
+def test_no_warning_within_threshold(tmp_path, capsys):
+    _write(tmp_path / "base.json", 10.0)
+    _write(tmp_path / "fresh.json", 8.0)          # -20% < 30% threshold
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 0
+    assert "::warning::" not in capsys.readouterr().out
+
+
+def test_warning_on_regression_non_fatal(tmp_path, capsys):
+    _write(tmp_path / "base.json", 10.0)
+    _write(tmp_path / "fresh.json", 5.0)          # -50% regression
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 0                                 # warn, don't fail
+    assert "::warning::" in capsys.readouterr().out
+
+
+def test_strict_mode_fails_on_regression(tmp_path):
+    _write(tmp_path / "base.json", 10.0)
+    _write(tmp_path / "fresh.json", 5.0)
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json"),
+                          "--strict"])
+    assert rc == 1
+
+
+def test_missing_records_skip_cleanly(tmp_path, capsys):
+    _write(tmp_path / "base.json", 10.0, run="warm_quick")  # wrong run name
+    _write(tmp_path / "fresh.json", 5.0)
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 0
+    assert "skipping" in capsys.readouterr().out
+    rc = perf_guard.main(["--baseline", str(tmp_path / "nope.json"),
+                          "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 0

@@ -6,9 +6,11 @@ produced by the original single-file `simulator.py` and must stay
 bit-identical.  Each entry is
 ``(cycles, stall_cycles, l1_hits, l1_misses, dram_accesses, prefetch_issued)``.
 
-The batched engine (`_batch_engine.py`) is pinned to the scalar engine in
-turn: full-`Stats` equality over the Table-3 grid (plus MSHR variants and
-per-cache reconfig overrides, runahead included) x paper kernels.
+The lane-parallel engines (`_batch_engine.py` for demand lanes,
+`_runahead_engine.py` for runahead lanes) are pinned to the scalar engine
+in turn: full-`Stats` equality over the Table-3 grid (plus MSHR/DRAM/L2
+timing variants and per-cache reconfig overrides, runahead included) x
+paper kernels, all routed through `simulate_batch`.
 """
 import dataclasses
 import json
@@ -71,13 +73,26 @@ def test_engine_parity_with_seed_simulator(trace_name):
 
 #: Table-3 columns + the axes the figure sweeps exercise: MSHR pressure,
 #: no-L2, multi-cache with heterogeneous per-cache geometry (reconfig
-#: output, including a 0-way cache), SPM-size variants, and runahead
-#: (which must fall back to the scalar walk per lane, exactly).
+#: output, including a 0-way cache), SPM-size variants, and runahead —
+#: including lanes engineered to exercise every runahead-engine path:
+#: reference lanes, clean speculation (timing-identical twins land in one
+#: group), and divergence + repair (MSHR/DRAM/L2 variants of one L1 shape).
 PARITY_GRID = {
     "base": presets.BASE,
     "cache_spm": presets.CACHE_SPM,
     "runahead": presets.RUNAHEAD,
     "runahead_mshr2": dataclasses.replace(presets.RUNAHEAD, mshr=2),
+    "runahead_mshr1": dataclasses.replace(presets.RUNAHEAD, mshr=1),
+    "runahead_mshr32": dataclasses.replace(presets.RUNAHEAD, mshr=32),
+    "runahead_dram40": dataclasses.replace(presets.RUNAHEAD,
+                                           dram_latency=40),
+    "runahead_l2lat1": dataclasses.replace(presets.RUNAHEAD,
+                                           l2_hit_latency=1),
+    "runahead_bus4": dataclasses.replace(presets.RUNAHEAD,
+                                         dram_bus_bytes_per_cycle=4),
+    "runahead_no_l2": dataclasses.replace(presets.RUNAHEAD, l2=None),
+    "runahead_storage": dataclasses.replace(presets.STORAGE_EXP,
+                                            runahead=True),
     "spm_only_4k": presets.SPM_ONLY_4K,
     "spm_only_133k": presets.SPM_ONLY_133K,
     "reconfig": presets.RECONFIG,
@@ -85,11 +100,18 @@ PARITY_GRID = {
     "storage_exp": presets.STORAGE_EXP,           # no L2
     "mshr1": dataclasses.replace(presets.CACHE_SPM, mshr=1),
     "spm0": dataclasses.replace(presets.CACHE_SPM, spm_bytes=0),
+    "runahead_spm0": dataclasses.replace(presets.RUNAHEAD, spm_bytes=0),
     "l1_per_cache": dataclasses.replace(presets.RECONFIG, l1_per_cache=(
         CacheConfig(ways=1, line=16, way_bytes=512),
         CacheConfig(ways=0, line=32, way_bytes=512),
         CacheConfig(ways=8, line=128, way_bytes=512),
         CacheConfig(ways=3, line=64, way_bytes=512))),
+    "l1_per_cache_ra": dataclasses.replace(
+        presets.RECONFIG, runahead=True, l1_per_cache=(
+            CacheConfig(ways=1, line=16, way_bytes=512),
+            CacheConfig(ways=0, line=32, way_bytes=512),
+            CacheConfig(ways=8, line=128, way_bytes=512),
+            CacheConfig(ways=3, line=64, way_bytes=512))),
 }
 
 PARITY_TRACES = {
@@ -121,6 +143,28 @@ def test_sweep_forced_scalar_matches_batched(tmp_path, monkeypatch):
         assert rb.stats == rs.stats
         assert rb.key == rs.key
         assert rs.engine == "scalar"
+
+
+def test_runahead_points_group_into_lane_batch_tasks(tmp_path):
+    """Runahead points no longer fall back to one-scalar-task-per-point:
+    every runahead config of a trace shares one lane key (a single task;
+    the runahead engine re-groups per L1 shape inside it), and the
+    executed points come back tagged with the runahead engine."""
+    ra = presets.RUNAHEAD
+    ra_mshr = dataclasses.replace(ra, mshr=2)
+    assert sw._lane_key(ra) is not None
+    assert sw._lane_key(ra) == sw._lane_key(ra_mshr)       # one lane batch
+    assert sw._lane_key(ra) == sw._lane_key(
+        dataclasses.replace(presets.RECONFIG, runahead=True))
+    assert sw._lane_key(ra) != sw._lane_key(presets.CACHE_SPM)
+    assert sw._lane_key(ra) != sw._lane_key(presets.SPM_ONLY_4K)
+    assert sw._lane_key(ra, force_scalar=True) is None     # golden path
+
+    res = sw.sweep([(TRACES["radix_hist_4k"], ra),
+                    (TRACES["radix_hist_4k"], ra_mshr)],
+                   store=sw.SimCache(tmp_path), workers=0)
+    assert [r.engine for r in res] == ["runahead", "runahead"]
+    assert all(not r.cached for r in res)
 
 
 # ---------------------------------------------------------------------------
