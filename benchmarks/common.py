@@ -42,13 +42,20 @@ _stats: dict[tuple[str, SimConfig], Stats] = {}
 _meta: dict[str, dict] = {}
 
 #: cumulative sweep accounting for ``BENCH_sim.json`` (benchmarks.run):
-#: wall-clock spent inside sweeps, per-engine point counts, and per-engine
+#: wall-clock spent inside sweeps, per-engine point counts, per-engine
 #: task seconds (how the in-worker wall-clock split across the batched,
-#: runahead, and forced-scalar engines)
+#: runahead, and forced-scalar engines), and the runahead engine's
+#: columnar-lockstep counters (how many lanes ran in lockstep vs scalar,
+#: and what fraction of lockstep ops diverged into per-lane microsteps)
 SWEEP_REPORT = {"seconds": 0.0, "points": 0, "cached": 0,
                 "batched": 0, "runahead": 0, "scalar": 0,
                 "batched_seconds": 0.0, "runahead_seconds": 0.0,
-                "scalar_seconds": 0.0}
+                "scalar_seconds": 0.0,
+                "batched_cpu_seconds": 0.0, "runahead_cpu_seconds": 0.0,
+                "scalar_cpu_seconds": 0.0,
+                "ra_lockstep_lanes": 0, "ra_scalar_lanes": 0,
+                "ra_groups": 0, "ra_windows": 0, "ra_shared_windows": 0,
+                "ra_lockstep_ops": 0, "ra_microstep_ops": 0}
 
 
 def warm(points) -> None:
@@ -74,6 +81,20 @@ def warm(points) -> None:
         else:
             SWEEP_REPORT[r.engine] += 1
             SWEEP_REPORT[r.engine + "_seconds"] += r.seconds
+            SWEEP_REPORT[r.engine + "_cpu_seconds"] += r.cpu_seconds
+            if r.diag is not None:
+                mode = r.diag.get("mode")
+                if mode == "lockstep":
+                    SWEEP_REPORT["ra_lockstep_lanes"] += 1
+                elif mode == "scalar":
+                    SWEEP_REPORT["ra_scalar_lanes"] += 1
+                grp = r.diag.get("group")
+                if grp:
+                    SWEEP_REPORT["ra_groups"] += 1
+                    SWEEP_REPORT["ra_windows"] += grp["windows"]
+                    SWEEP_REPORT["ra_shared_windows"] += grp["shared_windows"]
+                    SWEEP_REPORT["ra_lockstep_ops"] += grp["lockstep_ops"]
+                    SWEEP_REPORT["ra_microstep_ops"] += grp["microstep_ops"]
     SWEEP_REPORT["seconds"] += time.perf_counter() - t0
     SWEEP_REPORT["points"] += len(todo)
 

@@ -9,7 +9,7 @@ Execution model: every figure driver declares its (kernel, SimConfig) sweep
 points, and this driver warms them all through the sweep engine in ONE
 parallel batch before any figure emits a row — grouped per trace into lane
 batches: demand points through the batched engine, runahead points through
-the speculate-and-repair runahead engine (no scalar fallback remains
+the columnar lane-lockstep runahead engine (no scalar fallback remains
 outside ``REPRO_SWEEP_ENGINE=scalar``).  Results persist in
 ``artifacts/simcache/``, so a re-run only simulates points whose kernel,
 configuration, or simulator source changed (cache-warm-incremental).  Each
@@ -58,6 +58,7 @@ def write_bench_sim(total_seconds: float) -> dict:
     """
     rep = dict(common.SWEEP_REPORT)
     computed = rep["batched"] + rep["runahead"] + rep["scalar"]
+    ls_ops = rep["ra_lockstep_ops"]
     record = {
         "quick": common.QUICK,
         "wall_seconds": round(total_seconds, 3),
@@ -68,8 +69,20 @@ def write_bench_sim(total_seconds: float) -> dict:
         "runahead_points": rep["runahead"],
         "scalar_points": rep["scalar"],
         "engines": {eng: {"points": rep[eng],
-                          "seconds": round(rep[eng + "_seconds"], 3)}
+                          "seconds": round(rep[eng + "_seconds"], 3),
+                          "cpu_seconds": round(rep[eng + "_cpu_seconds"], 3)}
                     for eng in ("batched", "runahead", "scalar")},
+        "runahead_lockstep": {
+            "lockstep_lanes": rep["ra_lockstep_lanes"],
+            "scalar_lanes": rep["ra_scalar_lanes"],
+            "groups": rep["ra_groups"],
+            "windows": rep["ra_windows"],
+            "shared_windows": rep["ra_shared_windows"],
+            "lockstep_ops": ls_ops,
+            "microstep_ops": rep["ra_microstep_ops"],
+            "microstep_rate": round(rep["ra_microstep_ops"] / ls_ops, 4)
+            if ls_ops else None,
+        },
         "points_per_sec": round(rep["points"] / rep["seconds"], 2)
         if rep["seconds"] else None,
     }

@@ -4,7 +4,10 @@ The sweep engine's throughput record (written by ``python -m
 benchmarks.run``) is committed at the repo root, so every PR carries the
 perf trajectory.  This guard re-reads a freshly produced record and warns
 when sweep throughput (``points_per_sec``) regressed by more than the
-threshold against the baseline for the same run name.
+threshold against the baseline for the same run name — both in aggregate
+and **per engine** (the ``engines`` split in the record): a runahead
+regression cannot hide behind a batched-engine improvement, because each
+engine's own points/sec is compared separately.
 
 Non-fatal by default: CI machines differ from the machine that produced
 the committed record, so a warning is a prompt to look, not a gate.  Pass
@@ -42,6 +45,22 @@ def load_run(path: pathlib.Path, run: str) -> dict | None:
     return rec
 
 
+def engine_pps(rec: dict) -> dict[str, float]:
+    """Per-engine points/sec from a record's ``engines`` split.
+
+    Engines with no computed points (or a zero/absent seconds figure, as in
+    pre-split records) are omitted — there is nothing to compare.
+    """
+    out: dict[str, float] = {}
+    for name, eng in (rec.get("engines") or {}).items():
+        if not isinstance(eng, dict):
+            continue
+        pts, secs = eng.get("points") or 0, eng.get("seconds") or 0.0
+        if pts > 0 and secs > 0:
+            out[name] = pts / secs
+    return out
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_sim.json.baseline",
@@ -63,6 +82,7 @@ def main(argv=None) -> int:
         print("perf_guard: nothing to compare (skipping)")
         return 0
 
+    regressed = False
     b, f = base["points_per_sec"], fresh["points_per_sec"]
     ratio = f / b
     line = (f"perf_guard[{args.run}]: baseline {b} pts/s "
@@ -73,8 +93,27 @@ def main(argv=None) -> int:
         # '::warning::' renders as an annotation in GitHub Actions logs
         print(f"::warning::sweep throughput regressed >"
               f"{args.threshold:.0%}: {line}")
-        return 1 if args.strict else 0
-    print(line)
+        regressed = True
+    else:
+        print(line)
+
+    # per-engine splits: each engine present in both records must hold its
+    # own points/sec, so a hot-engine regression cannot hide behind another
+    # engine's improvement (or behind a point-mix shift)
+    base_eng, fresh_eng = engine_pps(base), engine_pps(fresh)
+    for name in sorted(base_eng.keys() & fresh_eng.keys()):
+        be, fe = base_eng[name], fresh_eng[name]
+        eratio = fe / be
+        eline = (f"perf_guard[{args.run}/{name}]: {be:.2f} -> "
+                 f"{fe:.2f} pts/s: {eratio:.2f}x")
+        if eratio < 1.0 - args.threshold:
+            print(f"::warning::{name} engine throughput regressed >"
+                  f"{args.threshold:.0%}: {eline}")
+            regressed = True
+        else:
+            print(eline)
+    if regressed and args.strict:
+        return 1
     return 0
 
 

@@ -31,8 +31,8 @@ together:
 
 * **Runahead routing**: runahead couples timing to cache content (prefetch
   decisions depend on stall windows), so runahead lanes are delegated to
-  the speculate-and-repair runahead engine (:mod:`._runahead_engine`), one
-  group per L1 shape.  Results are merged back in lane order.
+  the columnar lane-lockstep runahead engine (:mod:`._runahead_engine`),
+  one group per L1 shape.  Results are merged back in lane order.
 
 Everything here is pinned **bit-identical** to the scalar engine by
 `tests/test_sweep.py` (full-``Stats`` parity over the Table-3 grid x paper
@@ -382,10 +382,17 @@ def _spm_only_lane(trace: Trace, cfg, stats) -> None:
 # Batch entry point
 # ---------------------------------------------------------------------------
 
-def run_batch(trace: Trace, cfgs, stats_list) -> list[str]:
+def run_batch(trace: Trace, cfgs, stats_list, diags: list | None = None) \
+        -> list[str]:
     """Simulate every config in ``cfgs`` over ``trace``, mutating the
     matching ``stats_list`` entries.  Returns the per-lane engine tag
-    (``"batched"`` or ``"runahead"``) for reporting."""
+    (``"batched"`` or ``"runahead"``) for reporting.
+
+    ``diags``, when given, must be a list of ``len(cfgs)`` slots; runahead
+    lanes receive their engine diagnostics (the first lane of a lockstep
+    group carries the group's lockstep/microstep counters, see
+    :func:`repro.core.cgra._runahead_engine.run_group`).
+    """
     tags = ["batched"] * len(cfgs)
     groups: dict[tuple, list[int]] = {}
     ra_groups: dict[tuple, list[int]] = {}
@@ -394,7 +401,7 @@ def run_batch(trace: Trace, cfgs, stats_list) -> list[str]:
             _spm_only_lane(trace, cfg, stats_list[i])
         elif cfg.runahead:
             # prefetch content depends on stall timing: the runahead engine
-            # speculates each lane against a per-group reference walk
+            # advances such a group's lanes in columnar lockstep
             ra_groups.setdefault(_group_key(cfg), []).append(i)
             tags[i] = "runahead"
         else:
@@ -409,6 +416,10 @@ def run_batch(trace: Trace, cfgs, stats_list) -> list[str]:
         from . import _runahead_engine
 
         for idxs in ra_groups.values():
-            _runahead_engine.run_group(trace, [cfgs[i] for i in idxs],
-                                       [stats_list[i] for i in idxs])
+            group_diags = _runahead_engine.run_group(
+                trace, [cfgs[i] for i in idxs],
+                [stats_list[i] for i in idxs])
+            if diags is not None:
+                for i, d in zip(idxs, group_diags):
+                    diags[i] = d
     return tags

@@ -24,9 +24,9 @@ this one.
 
 This walk remains the golden reference for both lane-parallel engines:
 ``_batch_engine`` (demand lanes, shared content phase) and
-``_runahead_engine`` (runahead lanes, speculate-and-repair over stall
-windows) are each pinned bit-identical to it.  ``REPRO_SWEEP_ENGINE=scalar``
-forces sweeps down this path.
+``_runahead_engine`` (runahead lanes, columnar lane-lockstep advance over
+shared trace columns) are each pinned bit-identical to it.
+``REPRO_SWEEP_ENGINE=scalar`` forces sweeps down this path.
 """
 from __future__ import annotations
 

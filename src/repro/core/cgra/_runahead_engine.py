@@ -1,53 +1,73 @@
-"""Lane-parallel runahead engine: speculate-and-repair over stall windows.
+"""Columnar lane-lockstep runahead engine.
 
-Runahead execution (§3.2) is the one part of the simulator the batched
-engine (:mod:`._batch_engine`) cannot restructure: the walker's prefetch
-decisions couple cache *content* to stall *timing*, so there is no
-timing-independent content phase to share.  This module attacks the
-coupling directly.  The key observation is that a runahead run is a
-deterministic function of a small set of **timing predicates**; everything
-else — which lines the walker probes, how dummy bits propagate through
-``addr_dep`` chains, which prefetches are candidates, who gets evicted —
-is pure content, identical across lanes that share an L1 shape while the
-predicates agree.  The predicates are:
+Runahead execution (§3.2) couples cache *content* to stall *timing* — the
+walker's prefetch decisions depend on when each lane stalls and for how
+long — so the batched engine's shared content phase (:mod:`._batch_engine`)
+cannot cover runahead lanes.  PR 4's speculate-and-repair structure shared
+a reference walk across lanes, but its honest finding stands: the sweeps
+that matter most (MSHR pressure, fig 13/14) diverge in the very first
+pressure window, collapsing every follower to an independent scalar walk
+that re-reads every trace column and re-decides every skip predicate the
+other lanes just decided.
 
-* **window reach** — the walker adds ``ii`` per iteration boundary and
-  stops once it reaches the stall deadline, so a window's extent is exactly
-  ``ceil((deadline - now) / ii)`` iterations from the trigger: windows are
-  quantized by ``ii``, not by raw cycles;
-* **window alignment** — which demand events stall at all (store misses
-  stall only when the MSHR is exhausted, hits only when the line is still
-  in flight);
-* **MSHR admission** — whether a free MSHR entry exists when the walker
-  tries to issue a precise prefetch;
-* **in-flight dummy-ness** — whether a probed resident line's fill has
-  completed by the walker's quantized clock (``now + k*ii``).
+This engine abandons speculation and restructures the computation as a
+**columnar lockstep advance** over shared trace columns:
 
-Execution model per (trace, ``spm_bytes``/``n_caches``/L1-geometry) group:
+* **Shared trace columns.**  All timing-independent per-access data — the
+  demand and walker work lists, iteration bases, and the per-geometry
+  (flat-set, tag, line, cache) columns (``Trace.geometry_lists``) — is
+  computed once per (trace, spm, n_caches, L1-geometry) group and read
+  once per op for the whole group.  The *flat set* index concatenates all
+  caches' sets into one axis, so both hot loops address L1 state with a
+  single precomputed subscript and no per-access cache indirection.
 
-* a **reference lane** runs the full walk once, recording per stall window
-  a compact op log (LRU touches, in-flight probes with their truth,
-  prefetch candidates with their admission verdict);
-* every **other lane** runs its *demand* walk concretely against its own
-  complete state (L1 dicts, MSHR heaps, DRAM bus, L2), but replaces each
-  walker window with verified application of the reference ops — the
-  common case, since windows are quantized by ``ii`` and fill latencies;
-* on any predicate divergence the lane **restores the window checkpoint**
-  (lazily-saved L1 sets / MSHR heaps / L2 sets / prefetch ledger) and
-  re-walks that window scalar-style; because a diverged window leaves the
-  lane's cache content off the reference trajectory, the lane then stays
-  on the true walker for the rest of the trace (its state is complete, so
-  nothing is recomputed).
+* **Per-lane state, lane-major.**  Each lane owns its machine state: the
+  flat per-set L1 dicts (insertion order == LRU order, entry ==
+  ``[fill, pf_unused, pf_id]`` exactly as the golden engine keeps them),
+  MSHR ready-heaps, L2 recency dicts, DRAM-bus recurrence, prefetch
+  ledger, and stall clock.  The lockstep stepper advances every lane of
+  the group through one op before moving to the next, so the column
+  reads, branch structure, and skip predicates are paid once per op
+  instead of once per (op, lane).
 
-Both paths run on the rewritten hot loop: precomputed per-group NumPy
-columns compressed to the demand work list (non-SPM accesses) and the
-walker work list (non-SPM + SPM stores + dep-carrying accesses), with the
-stall-free cycle of every iteration precomputed as one ``cumsum`` base
-(mirroring :mod:`._batch_engine`) so event-free iterations are never
-visited.  Results are **bit-identical** to the scalar golden engine
-(:func:`repro.core.cgra._engine.run`); `tests/test_sweep.py` pins
-full-``Stats`` parity over the Table-3 grid x paper kernels and
-`tests/test_runahead_engine.py` pins the walker invariants.
+* **Lane-mask predicates.**  Window-local predicates that the scalar
+  walker tracks with per-lane Python sets become *lane bitmasks*:
+  ``dummy`` maps a trace index to the mask of lanes whose dummy bit is
+  set, ``temp`` maps an address to the mask of lanes that redirected a
+  store to temporary storage.  Each op resolves its skip masks once for
+  the whole group; a full-mask consensus skips the op for every lane with
+  no per-lane work at all, and only the surviving lanes run the per-lane
+  probe/admission **microstep**.  When predicates disagree across lanes
+  (mixed dummy bits, mixed hit/miss, mixed MSHR admission) the op
+  microsteps *for that op only* — never scalar-from-here; the per-group
+  microstep rate is reported through the sweep diagnostics into
+  ``BENCH_sim.json``.
+
+* **Lockstep stall windows.**  Lanes that stall at the same demand access
+  walk the shared window positions together.  Each lane's reach is its
+  own quantized ``ceil((deadline - now) / ii)`` bound, so lanes drop out
+  of the walk at their own precomputed position (the walk proceeds in
+  segments between drop boundaries; the active cohort is constant inside
+  a segment).  MSHR admissibility is prechecked per (lane, cache) at the
+  window open — a window whose ``entries``-th outstanding fill only
+  retires at/after the deadline can never admit a prefetch, which turns
+  the entirety of an ``mshr=1`` lane's candidates into one-dict-get
+  microsteps — and the walker clock is resolved lazily (a resident line
+  whose fill completed before the window opened can never be in flight
+  at ``now + k*ii``).
+
+Single-lane groups run the scalar walker (:func:`_run_lane` /
+:func:`_walk_window`) over the same shared columns; relative to PR 4 the
+scalar walker gains the per-cache admissibility precheck and the lazy
+clock on the multi-cache path (PR 4 had specialized only ``n_caches ==
+1``), which is what the fig-17 reconfigured-geometry lanes run.  The
+scalar path doubles as the recording walker for the invariant tests.
+Everything is pinned **bit-identical** to the scalar golden engine
+(:func:`repro.core.cgra._engine.run`): `tests/test_sweep.py` pins
+full-``Stats`` parity over the widened Table-3 grid x paper kernels and
+`tests/test_runahead_engine.py` pins the lockstep primitives (flat-set
+LRU step, admission mask, reach quantization) against the oracle cache
+and the golden walker op-for-op.
 """
 from __future__ import annotations
 
@@ -64,7 +84,7 @@ class _Columns:
     """Shared preprocessing of one (trace, L1-shape, SPM-size) lane group.
 
     Everything here is timing-independent and identical for every lane in
-    the group, so a 6-lane MSHR sweep pays the vectorized passes once.
+    the group, so an N-lane MSHR sweep pays the vectorized passes once.
     """
 
     def __init__(self, trace: Trace, cfg):
@@ -87,9 +107,7 @@ class _Columns:
             trace.spm_mask(cfg.spm_bytes)))
 
         # demand work list: non-SPM accesses, with per-iteration ranges for
-        # the non-empty iterations only (bulk-advance over the rest); the
-        # geometry-independent parts are memoized on the trace and shared
-        # by every lane group of this spm_bytes
+        # the non-empty iterations only (bulk-advance over the rest)
         al = trace.active_lists(cfg.spm_bytes)
         self.a_j = al["a_j"]
         self.a_store = al["a_store"]
@@ -106,58 +124,36 @@ class _Columns:
         self.w_ord = wl["w_ord"]
         self.rel_bounds = wl["rel_bounds"]
 
-        # geometry-dependent (line, set, tag, cache) columns, memoized per
-        # (spm, n_caches, L1 shape) on the trace (same-package private
-        # access): lane groups re-created across tasks — and prewarmed
-        # pre-fork by sweep.prewarm_traces — convert exactly once
-        gkey = ("ra_cols", int(cfg.spm_bytes), self.n_caches,
-                tuple((c.ways, c.line, c.way_bytes) for c in l1cfgs))
-        cols = trace._memo.get(gkey)
-        if cols is None:
-            cache_idx = trace.cache_index(self.n_caches)
-            if len({(c.line, c.sets) for c in l1cfgs}) == 1:
-                line = trace.addr // l1cfgs[0].line
-                nsets = l1cfgs[0].sets
-            else:
-                lines_c = np.asarray(self.l1_line, dtype=np.int64)
-                sets_c = np.asarray(self.l1_nsets, dtype=np.int64)
-                line = trace.addr // lines_c[cache_idx]
-                nsets = sets_c[cache_idx]
-            set_arr = line % nsets
-            tag_arr = line // nsets
-            act = trace.active_index(cfg.spm_bytes)
-            rel = trace.walker_index(cfg.spm_bytes)
-            cols = trace._memo[gkey] = {
-                "a_c": cache_idx[act].tolist(),
-                "a_set": set_arr[act].tolist(),
-                "a_tag": tag_arr[act].tolist(),
-                "a_line": line[act].tolist(),
-                "w_c": cache_idx[rel].tolist(),
-                "w_set": set_arr[rel].tolist(),
-                "w_tag": tag_arr[rel].tolist(),
-                "w_line": line[rel].tolist(),
-            }
-        self.a_c = cols["a_c"]
-        self.a_set = cols["a_set"]
-        self.a_tag = cols["a_tag"]
-        self.a_line = cols["a_line"]
-        self.w_c = cols["w_c"]
-        self.w_set = cols["w_set"]
-        self.w_tag = cols["w_tag"]
-        self.w_line = cols["w_line"]
+        # per-geometry flat-set/tag/line/cache columns, memoized on the
+        # trace and shared by every lane and every task of this group
+        gl = trace.geometry_lists(
+            cfg.spm_bytes, self.n_caches,
+            tuple((c.ways, c.line, c.way_bytes) for c in l1cfgs))
+        self.a_c = gl["a_c"]
+        self.a_fs = gl["a_fs"]
+        self.a_tag = gl["a_tag"]
+        self.a_line = gl["a_line"]
+        self.w_c = gl["w_c"]
+        self.w_fs = gl["w_fs"]
+        self.w_tag = gl["w_tag"]
+        self.w_line = gl["w_line"]
+        # per-flat-set way capacity (victim handling needs it without the
+        # cache indirection)
+        self.fs_ways = [w for c, w in enumerate(self.l1_ways)
+                        for _ in range(self.l1_nsets[c])]
 
 
 class _LaneState:
     """Complete per-lane machine state (content + timing).
 
-    Holding the *full* state on every lane — not just the timing replay —
-    is what makes repair cheap: at any divergence the lane simply keeps
-    walking scalar-style from where it stands.
+    ``sets`` is the flat per-set L1: one dict per flat set index, insertion
+    order == LRU order, entry == ``[fill, pf_unused, pf_id]`` — the golden
+    engine's layout, addressed through the group's flat-set columns.
     """
 
     __slots__ = ("entries", "bus_latency", "bus_last", "l2_on", "l2_line",
                  "l2_nsets", "l2_ways", "l2_hit_lat", "l2_occ", "l1_occ",
-                 "l1_sets", "mshr_ready", "l2_sets", "dram", "l2_hits",
+                 "l2_sets", "sets", "mshr_ready", "dram", "l2_hits",
                  "prefetch_issued", "runahead_entries", "pf_records",
                  "pf_outcome")
 
@@ -178,7 +174,7 @@ class _LaneState:
         else:
             self.l2_sets = None
             self.l1_occ = [max(1, ln // bpc) for ln in g.l1_line]
-        self.l1_sets = [[{} for _ in range(s)] for s in g.l1_nsets]
+        self.sets = [{} for _ in range(len(g.fs_ways))]
         self.mshr_ready = [[] for _ in range(g.n_caches)]
         self.dram = 0
         self.l2_hits = 0
@@ -190,34 +186,37 @@ class _LaneState:
         self.pf_outcome = []
 
 
-def snapshot_lane_l1(l1_sets) -> list:
-    """Copy of the per-cache/per-set L1 dicts (insertion order == LRU order).
+def _admissible(lane: _LaneState, n_caches: int, now: int,
+                deadline: int) -> list:
+    """Per-cache MSHR admissibility over a window ``[now, deadline)``.
 
-    Entries are shared by reference: window ops never mutate an entry list
-    in place (touch re-inserts it, install creates a new one), so restoring
-    the dicts restores content, LRU order, fill times and prefetch flags
-    exactly.  `tests/test_runahead_engine.py` pins the round trip.
+    Pruning against the window-open cycle is always safe (every later
+    query is >= now), and lets admissibility be decided once per cache: if
+    the ``entries``-th outstanding fill only retires at/after the deadline,
+    no prefetch can be admitted anywhere in this window (the walker clock
+    stays below the deadline, and the heap only grows).
     """
-    return [[dict(d) for d in sets] for sets in l1_sets]
-
-
-def restore_lane_l1(l1_sets, snap) -> None:
-    """Put a :func:`snapshot_lane_l1` copy back into the live structure."""
-    for sets, ssets in zip(l1_sets, snap):
-        for s, d in enumerate(ssets):
-            sets[s] = dict(d)
+    entries = lane.entries
+    adm = []
+    for c in range(n_caches):
+        rl = lane.mshr_ready[c]
+        if rl:
+            ip = _bisect_right(rl, now)
+            if ip:
+                del rl[:ip]
+        adm.append(len(rl) < entries or rl[len(rl) - entries] < deadline)
+    return adm
 
 
 def _walk_window(g: _Columns, lane: _LaneState, j0: int, ord0: int, now: int,
-                 deadline: int, blocked: int, ops: list | None) -> None:
-    """True §3.2 walker for one stall window ``[now, deadline)``.
+                 deadline: int, blocked: int, ops: list | None = None) -> None:
+    """True §3.2 walker for one stall window ``[now, deadline)``, scalar.
 
-    Bit-identical to ``_engine.run``'s ``run_walker`` but restructured onto
-    the precomputed walker work list: the extent is resolved up front from
-    the quantized reach (no per-access iteration branch), skippable
-    accesses are never visited, and the prefetch/MSHR/L2 machinery is
-    inlined.  When ``ops`` is a list the content-op log is recorded for the
-    follower lanes of the group.
+    Bit-identical to ``_engine.run``'s ``run_walker`` restructured onto the
+    precomputed walker work list: the extent is resolved up front from the
+    quantized reach, skippable accesses are never visited, admissibility
+    is prechecked per cache, and the walker clock is lazy.  When ``ops``
+    is a list the per-op content log is recorded (walker-invariant tests).
     """
     lane.runahead_entries += 1
     ii = g.ii
@@ -238,11 +237,12 @@ def _walk_window(g: _Columns, lane: _LaneState, j0: int, ord0: int, now: int,
     w_addr = g.w_addr
     w_ord = g.w_ord
     w_c = g.w_c
-    w_set = g.w_set
+    w_fs = g.w_fs
     w_tag = g.w_tag
     w_line = g.w_line
-    l1_sets = lane.l1_sets
-    l1_ways = g.l1_ways
+    sets = lane.sets
+    fs_ways = g.fs_ways
+    l1_line = g.l1_line
     mshr_ready = lane.mshr_ready
     entries = lane.entries
     pf_records = lane.pf_records
@@ -262,43 +262,51 @@ def _walk_window(g: _Columns, lane: _LaneState, j0: int, ord0: int, now: int,
         l2_hits = lane.l2_hits
     else:
         l1_occ = lane.l1_occ
-    l1_line = g.l1_line
+
+    adm = _admissible(lane, g.n_caches, now, deadline)
 
     dummy = {blocked}
     temp = set()
     ra = now
     last_ord = ord0
+    record = ops is not None
     for widx in range(i0, i1):
         dep = w_dep[widx]
+        st = w_store[widx]
         if dep >= 0 and dep in dummy:
-            if not w_store[widx]:
+            if not st:
                 dummy.add(w_j[widx])      # dummy address -> dummy value
             continue
         if w_spm[widx]:
-            if w_store[widx]:
+            if st:
                 temp.add(w_addr[widx])
             continue
-        c = w_c[widx]
-        s = w_set[widx]
-        d = l1_sets[c][s]
+        fs = w_fs[widx]
+        d = sets[fs]
         tg = w_tag[widx]
         ent = d.get(tg)
-        st = w_store[widx]
         if not st:
             if w_addr[widx] in temp:
                 continue
             if ent is not None:
                 del d[tg]                 # probe touches resident lines
                 d[tg] = ent
-                o = w_ord[widx]
-                if o != last_ord:
-                    ra = now + (o - ord0) * ii
-                    last_ord = o
-                infl = ent[0] > ra
-                if infl:
-                    dummy.add(w_j[widx])  # in-flight: value dummy
-                if ops is not None:
-                    ops.append((1, c, s, tg, o - ord0, infl))
+                if record:
+                    o = w_ord[widx]
+                    if o != last_ord:
+                        ra = now + (o - ord0) * ii
+                        last_ord = o
+                    infl = ent[0] > ra
+                    if infl:
+                        dummy.add(w_j[widx])
+                    ops.append((1, w_c[widx], fs, tg, o - ord0, infl))
+                elif ent[0] > now:        # else: fill done before the window
+                    o = w_ord[widx]
+                    if o != last_ord:
+                        ra = now + (o - ord0) * ii
+                        last_ord = o
+                    if ent[0] > ra:
+                        dummy.add(w_j[widx])  # in-flight: value dummy
                 continue
             dummy.add(w_j[widx])
         else:
@@ -307,10 +315,16 @@ def _walk_window(g: _Columns, lane: _LaneState, j0: int, ord0: int, now: int,
             if ent is not None:
                 del d[tg]
                 d[tg] = ent
-                if ops is not None:
-                    ops.append((0, c, s, tg))
+                if record:
+                    ops.append((0, w_c[widx], fs, tg))
                 continue
         # prefetch candidate (missing line): bounded by free MSHR entries
+        c = w_c[widx]
+        if not adm[c]:
+            if record:
+                ops.append((2, c, fs, tg, w_line[widx], w_j[widx],
+                            w_ord[widx] - ord0, False))
+            continue
         o = w_ord[widx]
         if o != last_ord:
             ra = now + (o - ord0) * ii
@@ -357,7 +371,7 @@ def _walk_window(g: _Columns, lane: _LaneState, j0: int, ord0: int, now: int,
             pf_id = len(pf_records)
             pf_records.append((c, ln, w_j[widx]))
             pf_outcome.append("pending")
-            ways = l1_ways[c]
+            ways = fs_ways[fs]
             if ways > 0:
                 if len(d) >= ways:
                     victim = d.pop(next(iter(d)))
@@ -367,8 +381,8 @@ def _walk_window(g: _Columns, lane: _LaneState, j0: int, ord0: int, now: int,
             prefetch_issued += 1
         else:
             free = False
-        if ops is not None:
-            ops.append((2, c, s, tg, ln, w_j[widx], o - ord0, free))
+        if record:
+            ops.append((2, c, fs, tg, ln, w_j[widx], o - ord0, free))
 
     lane.bus_last = bus_last
     lane.dram = dram
@@ -379,16 +393,14 @@ def _walk_window(g: _Columns, lane: _LaneState, j0: int, ord0: int, now: int,
 
 def _walk_window_1(g: _Columns, lane: _LaneState, j0: int, ord0: int,
                    now: int, deadline: int, blocked: int,
-                   ops: list | None) -> None:
+                   ops: list | None = None) -> None:
     """Single-cache specialization of :func:`_walk_window`.
 
-    Every per-cache subscript is hoisted, the walker clock is resolved
-    lazily (a resident line whose fill completed before the window opened
-    can never be in flight at ``now + k*ii``), and windows in which the
-    MSHR provably stays exhausted until the deadline — the entirety of an
-    ``mshr=1`` sweep lane, whose only free entry is held by the blocking
-    fill itself — skip the admission machinery per missing line.  Behavior
-    is bit-identical to the general walker; the parity grid runs both.
+    Every per-cache subscript is hoisted (for ``n_caches == 1`` the flat
+    set index *is* the set index), the walker clock is resolved lazily,
+    and the single admissibility bool gates the whole candidate path.
+    Behavior is bit-identical to the general walker; the parity grid runs
+    both.
     """
     lane.runahead_entries += 1
     ii = g.ii
@@ -402,16 +414,44 @@ def _walk_window_1(g: _Columns, lane: _LaneState, j0: int, ord0: int,
     if i0 >= i1:
         return
 
+    rl = lane.mshr_ready[0]
+    entries = lane.entries
+    # pruning against the window-open cycle is always safe (every later
+    # query is >= now), and lets admissibility be decided once: if the
+    # (entries)-th outstanding fill only retires at/after the deadline, no
+    # prefetch can be admitted anywhere in this window
+    if rl:
+        ip = _bisect_right(rl, now)
+        if ip:
+            del rl[:ip]
+    admissible = len(rl) < entries or rl[len(rl) - entries] < deadline
+    _walk_range_1(g, lane, i0, i1, now, ord0, now, ord0, admissible,
+                  {blocked}, set(), ops)
+
+
+def _walk_range_1(g: _Columns, lane: _LaneState, i0: int, i1: int, now: int,
+                  ord0: int, ra: int, last_ord: int, admissible: bool,
+                  dummy: set, temp: set, ops: list | None = None) -> None:
+    """Walk positions ``[i0, i1)`` of a single-cache window scalar-style.
+
+    The loop body of the §3.2 walker over explicit state, so it serves
+    both :func:`_walk_window_1` (a whole window from its opening state)
+    and the lockstep stepper's solo tail — once a shared window's active
+    cohort drops to one lane there are no masks left to share, and the
+    remaining positions run here with the surviving lane's dummy/temp
+    sets and walker clock carried over.
+    """
+    ii = g.ii
     w_j = g.w_j
     w_dep = g.w_dep
     w_store = g.w_store
     w_spm = g.w_spm
     w_addr = g.w_addr
     w_ord = g.w_ord
-    w_set = g.w_set
+    w_fs = g.w_fs
     w_tag = g.w_tag
     w_line = g.w_line
-    sets0 = lane.l1_sets[0]
+    sets = lane.sets
     ways0 = g.l1_ways[0]
     line0 = g.l1_line[0]
     rl = lane.mshr_ready[0]
@@ -434,20 +474,6 @@ def _walk_window_1(g: _Columns, lane: _LaneState, j0: int, ord0: int,
     else:
         occ0 = lane.l1_occ[0]
 
-    # pruning against the window-open cycle is always safe (every later
-    # query is >= now), and lets admissibility be decided once: if the
-    # (entries)-th outstanding fill only retires at/after the deadline, no
-    # prefetch can be admitted anywhere in this window
-    if rl:
-        ip = _bisect_right(rl, now)
-        if ip:
-            del rl[:ip]
-    admissible = len(rl) < entries or rl[len(rl) - entries] < deadline
-
-    dummy = {blocked}
-    temp = set()
-    ra = now
-    last_ord = ord0
     record = ops is not None
     for widx in range(i0, i1):
         dep = w_dep[widx]
@@ -459,8 +485,8 @@ def _walk_window_1(g: _Columns, lane: _LaneState, j0: int, ord0: int,
             if w_store[widx]:
                 temp.add(w_addr[widx])
             continue
-        s = w_set[widx]
-        d = sets0[s]
+        fs = w_fs[widx]
+        d = sets[fs]
         tg = w_tag[widx]
         ent = d.get(tg)
         if not w_store[widx]:
@@ -477,7 +503,7 @@ def _walk_window_1(g: _Columns, lane: _LaneState, j0: int, ord0: int,
                     infl = ent[0] > ra
                     if infl:
                         dummy.add(w_j[widx])
-                    ops.append((1, 0, s, tg, o - ord0, infl))
+                    ops.append((1, 0, fs, tg, o - ord0, infl))
                 elif ent[0] > now:        # else: fill done before the window
                     o = w_ord[widx]
                     if o != last_ord:
@@ -494,14 +520,13 @@ def _walk_window_1(g: _Columns, lane: _LaneState, j0: int, ord0: int,
                 del d[tg]
                 d[tg] = ent
                 if record:
-                    ops.append((0, 0, s, tg))
+                    ops.append((0, 0, fs, tg))
                 continue
         # prefetch candidate (missing line): bounded by free MSHR entries
         if not admissible:
             if record:
-                o = w_ord[widx]
-                ops.append((2, 0, s, tg, w_line[widx], w_j[widx],
-                            o - ord0, False))
+                ops.append((2, 0, fs, tg, w_line[widx], w_j[widx],
+                            w_ord[widx] - ord0, False))
             continue
         o = w_ord[widx]
         if o != last_ord:
@@ -558,7 +583,7 @@ def _walk_window_1(g: _Columns, lane: _LaneState, j0: int, ord0: int,
         else:
             free = False
         if record:
-            ops.append((2, 0, s, tg, ln, w_j[widx], o - ord0, free))
+            ops.append((2, 0, fs, tg, ln, w_j[widx], o - ord0, free))
 
     lane.bus_last = bus_last
     lane.dram = dram
@@ -567,183 +592,26 @@ def _walk_window_1(g: _Columns, lane: _LaneState, j0: int, ord0: int,
         lane.l2_hits = l2_hits
 
 
-def _apply_window(g: _Columns, lane: _LaneState, win: tuple, now: int,
-                  deadline: int) -> bool:
-    """Speculatively apply a reference window's op log to ``lane``.
-
-    Verifies every timing predicate against the lane's own state; on the
-    first divergence the lazily-saved checkpoint (touched L1 sets, MSHR
-    heaps, L2 sets, bus/counters, prefetch ledger) is restored and False
-    is returned so the caller re-walks the window scalar-style.
-    """
-    trigger, c_stop_ref, ops = win
-    ii = g.ii
-    if -((now - deadline) // ii) != c_stop_ref:
-        return False                      # different quantized reach
-
-    l1_sets = lane.l1_sets
-    l1_ways = g.l1_ways
-    l1_line = g.l1_line
-    mshr_ready = lane.mshr_ready
-    entries = lane.entries
-    pf_records = lane.pf_records
-    pf_outcome = lane.pf_outcome
-    bus_latency = lane.bus_latency
-    l2_on = lane.l2_on
-    if l2_on:
-        l2_line = lane.l2_line
-        l2_nsets = lane.l2_nsets
-        l2_ways = lane.l2_ways
-        l2_hit_lat = lane.l2_hit_lat
-        l2_occ = lane.l2_occ
-        l2_sets = lane.l2_sets
-    else:
-        l1_occ = lane.l1_occ
-
-    saved_l1: dict = {}
-    saved_mshr: dict = {}
-    saved_l2: dict = {}
-    journal: list = []
-    bus0 = lane.bus_last
-    dram0 = lane.dram
-    l2h0 = lane.l2_hits
-    pfi0 = lane.prefetch_issued
-    pfn = len(pf_records)
-    bus_last = bus0
-    dram = dram0
-    l2_hits = l2h0
-    prefetch_issued = pfi0
-    ok = True
-
-    for op in ops:
-        k = op[0]
-        if k != 2:
-            c, s, tg = op[1], op[2], op[3]
-            d = l1_sets[c][s]
-            ent = d.get(tg)
-            if ent is None:
-                ok = False                # content drift (defensive)
-                break
-            if k == 1 and (ent[0] > now + op[4] * ii) != op[5]:
-                ok = False                # in-flight dummy-ness diverges
-                break
-            key = (c, s)
-            if key not in saved_l1:
-                saved_l1[key] = dict(d)
-            del d[tg]
-            d[tg] = ent
-            continue
-        _, c, s, tg, ln, j2, dord, accepted = op
-        ra = now + dord * ii
-        rl = mshr_ready[c]
-        if c not in saved_mshr:
-            saved_mshr[c] = rl[:]
-        if rl:
-            ip = _bisect_right(rl, ra)
-            if ip:
-                del rl[:ip]
-        if (len(rl) < entries) != accepted:
-            ok = False                    # MSHR admission diverges
-            break
-        if not accepted:
-            continue
-        d = l1_sets[c][s]
-        key = (c, s)
-        if key not in saved_l1:
-            saved_l1[key] = dict(d)
-        if l2_on:
-            l2l = (ln * l1_line[c]) // l2_line
-            s2 = l2l % l2_nsets
-            d2 = l2_sets[s2]
-            if s2 not in saved_l2:
-                saved_l2[s2] = dict(d2)
-            tg2 = l2l // l2_nsets
-            r2 = d2.get(tg2)
-            if r2 is not None and r2 <= ra:
-                del d2[tg2]
-                d2[tg2] = r2
-                l2_hits += 1
-                fill = ra + l2_hit_lat
-            else:
-                dram += 1
-                fill = ra + bus_latency
-                if fill < bus_last + l2_occ:
-                    fill = bus_last + l2_occ
-                bus_last = fill
-                if r2 is not None:
-                    del d2[tg2]
-                elif len(d2) >= l2_ways:
-                    del d2[next(iter(d2))]
-                d2[tg2] = fill
-        else:
-            dram += 1
-            fill = ra + bus_latency
-            if fill < bus_last + l1_occ[c]:
-                fill = bus_last + l1_occ[c]
-            bus_last = fill
-        if rl and fill < rl[-1]:
-            _insort(rl, fill)
-        else:
-            rl.append(fill)
-        pf_id = len(pf_records)
-        pf_records.append((c, ln, j2))
-        pf_outcome.append("pending")
-        ways = l1_ways[c]
-        if ways > 0:
-            if len(d) >= ways:
-                victim = d.pop(next(iter(d)))
-                if victim[1] and victim[2] >= 0:
-                    journal.append((victim[2], pf_outcome[victim[2]]))
-                    pf_outcome[victim[2]] = "evicted"
-            d[tg] = [fill, True, pf_id]
-        prefetch_issued += 1
-
-    if ok:
-        lane.bus_last = bus_last
-        lane.dram = dram
-        lane.l2_hits = l2_hits
-        lane.prefetch_issued = prefetch_issued
-        lane.runahead_entries += 1
-        return True
-
-    # repair: restore the checkpoint; caller re-walks this window
-    for (c, s), dcopy in saved_l1.items():
-        l1_sets[c][s] = dcopy
-    for c, rlcopy in saved_mshr.items():
-        mshr_ready[c] = rlcopy
-    for s2, dcopy in saved_l2.items():
-        l2_sets[s2] = dcopy
-    for vid, old in reversed(journal):
-        pf_outcome[vid] = old
-    del pf_records[pfn:]
-    del pf_outcome[pfn:]
-    return False
-
-
-def _run_lane(g: _Columns, cfg, stats, record: list | None = None,
-              log: list | None = None) -> dict:
+def _run_lane(g: _Columns, cfg, stats, record: list | None = None) -> dict:
     """Run one runahead lane over the shared columns, mutating ``stats``.
 
-    ``record`` — list to fill with per-window op logs (reference lane);
-    ``log`` — a reference log to speculate against (follower lane).
-    Returns a diagnostics dict (speculated/walked window counts and where
-    the lane left the reference trajectory, if it did).
+    ``record`` — list to fill with per-window op logs (tests).  Returns a
+    diagnostics dict.
     """
     lane = _LaneState(g, cfg)
     n_iters = g.n_iters
-    ii = g.ii
-    stats.compute_cycles = n_iters * ii
+    stats.compute_cycles = n_iters * g.ii
 
     a_j = g.a_j
     a_c = g.a_c
-    a_set = g.a_set
+    a_fs = g.a_fs
     a_tag = g.a_tag
     a_line = g.a_line
     a_store = g.a_store
     starts = g.starts
     base = g.base
-    l1_sets = lane.l1_sets
-    l1_ways = g.l1_ways
+    sets = lane.sets
+    fs_ways = g.fs_ways
     l1_line = g.l1_line
     mshr_ready = lane.mshr_ready
     entries = lane.entries
@@ -761,22 +629,16 @@ def _run_lane(g: _Columns, cfg, stats, record: list | None = None,
         l1_occ = lane.l1_occ
 
     walk = _walk_window_1 if g.n_caches == 1 else _walk_window
-    speculating = log is not None
-    n_log = len(log) if speculating else 0
-    win_i = 0
-    next_trigger = log[0][0] if n_log else -1
-    diverged_at = None
-    applied_windows = 0
-
     S = 0
     stall = 0
     l1_hits = l1_misses = uncovered = covered = prefetch_used = 0
 
     for t, lo, hi in g.it_rows:
-        now = base[t] + S
+        bt = base[t]
+        now = bt + S
         for idx in range(lo, hi):
-            c = a_c[idx]
-            d = l1_sets[c][a_set[idx]]
+            fs = a_fs[idx]
+            d = sets[fs]
             tg = a_tag[idx]
             ent = d.get(tg)
             st = a_store[idx]
@@ -791,13 +653,11 @@ def _run_lane(g: _Columns, cfg, stats, record: list | None = None,
                     covered += 1
                 l1_hits += 1
                 if st or ent[0] <= now:
-                    if speculating and a_j[idx] == next_trigger:
-                        speculating = False       # reference stalled here
-                        diverged_at = next_trigger
                     continue
                 ready = ent[0]            # in-flight fill: partial wait
             else:
                 l1_misses += 1
+                c = a_c[idx]
                 rl = mshr_ready[c]
                 if rl:
                     ip = _bisect_right(rl, now)
@@ -837,7 +697,7 @@ def _run_lane(g: _Columns, cfg, stats, record: list | None = None,
                     _insort(rl, fill)
                 else:
                     rl.append(fill)
-                ways = l1_ways[c]
+                ways = fs_ways[fs]
                 if ways > 0:
                     if len(d) >= ways:
                         victim = d.pop(next(iter(d)))
@@ -846,9 +706,6 @@ def _run_lane(g: _Columns, cfg, stats, record: list | None = None,
                     d[tg] = [fill, False, -1]
                 if st:
                     if issue <= now:      # store buffer absorbs the miss
-                        if speculating and a_j[idx] == next_trigger:
-                            speculating = False
-                            diverged_at = next_trigger
                         continue
                     ready = issue
                 else:
@@ -858,34 +715,14 @@ def _run_lane(g: _Columns, cfg, stats, record: list | None = None,
                 j = a_j[idx]
                 j0 = j + 1
                 ord0 = t if j0 < starts[t + 1] else t + 1
-                if speculating:
-                    win = log[win_i] if win_i < n_log else None
-                    if win is not None and win[0] == j:
-                        applied = _apply_window(g, lane, win, now, ready)
-                        win_i += 1
-                        next_trigger = log[win_i][0] if win_i < n_log else -1
-                        if applied:
-                            applied_windows += 1
-                        else:
-                            speculating = False
-                            diverged_at = j
-                            walk(g, lane, j0, ord0, now, ready, j, None)
-                    else:
-                        speculating = False       # lane stalls, ref didn't
-                        diverged_at = j
-                        walk(g, lane, j0, ord0, now, ready, j, None)
-                else:
-                    ops = None
-                    if record is not None:
-                        ops = []
-                        record.append((j, -((now - ready) // ii), ops))
-                    walk(g, lane, j0, ord0, now, ready, j, ops)
+                ops = None
+                if record is not None:
+                    ops = []
+                    record.append((j, -((now - ready) // g.ii), ops))
+                walk(g, lane, j0, ord0, now, ready, j, ops)
                 stall += ready - now
-                S = ready - base[t]
+                S = ready - bt
                 now = ready
-            elif speculating and a_j[idx] == next_trigger:
-                speculating = False
-                diverged_at = a_j[idx]
 
     stats.cycles = (base[n_iters - 1] + S) if n_iters else 0
     stats.stall_cycles = stall
@@ -902,33 +739,445 @@ def _run_lane(g: _Columns, cfg, stats, record: list | None = None,
 
     _engine._classify_prefetches(g.trace, cfg, lane.pf_records,
                                  lane.pf_outcome, stats)
-    return {"applied_windows": applied_windows,
-            "walked_windows": lane.runahead_entries - applied_windows,
-            "diverged_at": diverged_at}
+    return {"mode": "scalar", "windows": lane.runahead_entries}
 
 
-def _reference_lane(cfgs) -> int:
-    """Pick the group's reference: the most permissive MSHR (fewest
-    admission rejections), ties broken by input order.  Lanes with laxer
-    timing than the reference tend to agree on every window; tighter lanes
-    diverge at their first pressure point and continue scalar from there.
+def _lockstep_window(g: _Columns, lanes, stalled, j0: int, ord0: int,
+                     blocked: int, counters) -> None:
+    """Walk one stall window for every stalled lane in lockstep.
+
+    ``stalled`` is ``[(lane_index, now, deadline), ...]``.  Each lane's
+    quantized reach bounds its own walk; lanes drop out of the walk at
+    their own precomputed end position (segments between drop boundaries
+    keep the active cohort constant).  Skip predicates (dummy bits over
+    ``addr_dep``, temp-storage redirects) are lane bitmasks resolved once
+    per op; probes and MSHR admission run as per-lane microsteps over the
+    flat-set dicts.  ``counters`` accumulates the group's lockstep and
+    microstep op counts.
     """
-    return max(range(len(cfgs)), key=lambda i: (cfgs[i].mshr, -i))
+    ii = g.ii
+    n_iters = g.n_iters
+    rel_bounds = g.rel_bounds
+    i0 = _bisect_left(g.rel, j0)
+
+    # per-window lane slots (parallel lists indexed by cohort position k)
+    lane_a: list = []
+    i1_a: list = []
+    now_a: list = []
+    dl_a: list = []
+    ra_a: list = []
+    lord_a: list = []
+    adm_a: list = []
+    sets_a: list = []
+    mshr_a: list = []
+    ent_a: list = []
+    n_caches = g.n_caches
+    for li, now, deadline in stalled:
+        lane = lanes[li]
+        c_stop = -((now - deadline) // ii)
+        end_ord = ord0 + c_stop
+        if end_ord > n_iters:
+            end_ord = n_iters
+        i1 = rel_bounds[end_ord]
+        if i1 <= i0:
+            lane.runahead_entries += 1     # empty window, as in the scalar
+            continue
+        lane_a.append(lane)
+        i1_a.append(i1)
+        now_a.append(now)
+        dl_a.append(deadline)
+        sets_a.append(lane.sets)
+        mshr_a.append(lane.mshr_ready)
+        ent_a.append(lane.entries)
+    K = len(lane_a)
+    if K == 0:
+        return
+    counters[0] += 1                       # windows walked
+    nc1 = n_caches == 1
+    if K == 1:
+        # solo window: no masks to share — run the scalar walker body
+        walk = _walk_window_1 if nc1 else _walk_window
+        walk(g, lane_a[0], j0, ord0, now_a[0], dl_a[0], blocked)
+        return
+    for k in range(K):
+        lane_a[k].runahead_entries += 1
+        ra_a.append(now_a[k])
+        lord_a.append(ord0)
+        adm_a.append(_admissible(lane_a[k], n_caches, now_a[k], dl_a[k]))
+    counters[1] += 1                       # windows shared by >= 2 lanes
+
+    w_j = g.w_j
+    w_dep = g.w_dep
+    w_store = g.w_store
+    w_spm = g.w_spm
+    w_addr = g.w_addr
+    w_ord = g.w_ord
+    w_c = g.w_c
+    w_fs = g.w_fs
+    w_tag = g.w_tag
+    w_line = g.w_line
+    fs_ways = g.fs_ways
+    l1_line = g.l1_line
+
+    dummy: dict = {blocked: (1 << K) - 1}
+    temp: dict = {}
+    dummy_get = dummy.get
+    temp_get = temp.get
+
+    ops_total = counters[2]
+    ops_micro = counters[3]
+
+    # walk in segments between lane end positions: the active cohort is
+    # constant inside a segment
+    bounds = sorted(set(i1_a))
+    cur = i0
+    for seg_end in bounds:
+        act = [k for k in range(K) if i1_a[k] > cur]
+        if not act:
+            break
+        if len(act) == 1 and nc1:
+            # solo tail: no masks left to share — run the scalar range
+            # walker with the surviving lane's dummy/temp bits and clock
+            k = act[0]
+            bit = 1 << k
+            counters[2] = ops_total + (i1_a[k] - cur)
+            counters[3] = ops_micro
+            _walk_range_1(g, lane_a[k], cur, i1_a[k], now_a[k], ord0,
+                          ra_a[k], lord_a[k], adm_a[k][0],
+                          {j for j, bm in dummy.items() if bm & bit},
+                          {a for a, bm in temp.items() if bm & bit})
+            return
+        act_bm = 0
+        for k in act:
+            act_bm |= 1 << k
+        n_act = len(act)
+        ops_total += seg_end - cur
+        for widx in range(cur, seg_end):
+            dep = w_dep[widx]
+            st = w_store[widx]
+            if dep >= 0:
+                bm = dummy_get(dep)
+                if bm:
+                    bm &= act_bm
+                    if bm:
+                        if not st:
+                            jj = w_j[widx]
+                            dummy[jj] = dummy_get(jj, 0) | bm
+                        go = act_bm & ~bm
+                        if not go:
+                            continue      # consensus dummy skip
+                        ops_micro += 1     # mixed dummy bits
+                    else:
+                        go = act_bm
+                else:
+                    go = act_bm
+            else:
+                go = act_bm
+            if w_spm[widx]:
+                if st:
+                    a = w_addr[widx]
+                    temp[a] = temp_get(a, 0) | go
+                continue
+            if st:
+                a = w_addr[widx]
+                temp[a] = temp_get(a, 0) | go
+            else:
+                tm = temp_get(w_addr[widx])
+                if tm:
+                    tm &= go
+                    if tm:
+                        go &= ~tm
+                        if not go:
+                            continue      # consensus temp-storage skip
+                        ops_micro += 1     # mixed temp redirects
+            if go == act_bm:
+                cohort = act
+                n_coh = n_act
+            else:
+                cohort = [k for k in act if (go >> k) & 1]
+                n_coh = len(cohort)
+            fs = w_fs[widx]
+            tg = w_tag[widx]
+            c = w_c[widx]
+            o = -1
+            nh = 0
+            dmiss = 0
+            nadm = 0
+            nrej = 0
+            for k in cohort:
+                d = sets_a[k][fs]
+                ent = d.get(tg)
+                if ent is not None:
+                    nh += 1
+                    del d[tg]             # probe touches resident lines
+                    d[tg] = ent
+                    if st:
+                        continue
+                    f = ent[0]
+                    if f > now_a[k]:
+                        if o < 0:
+                            o = w_ord[widx]
+                        if o != lord_a[k]:
+                            ra_a[k] = now_a[k] + (o - ord0) * ii
+                            lord_a[k] = o
+                        if f > ra_a[k]:
+                            dmiss |= 1 << k  # in-flight: value dummy
+                    continue
+                # missing line
+                if not st:
+                    dmiss |= 1 << k
+                if not adm_a[k][c]:
+                    nrej += 1
+                    continue
+                if o < 0:
+                    o = w_ord[widx]
+                if o != lord_a[k]:
+                    ra_a[k] = now_a[k] + (o - ord0) * ii
+                    lord_a[k] = o
+                ra = ra_a[k]
+                rl = mshr_a[k][c]
+                if rl:
+                    ip = _bisect_right(rl, ra)
+                    if ip:
+                        del rl[:ip]
+                if len(rl) >= ent_a[k]:
+                    nrej += 1
+                    continue
+                nadm += 1
+                lane = lane_a[k]
+                ln = w_line[widx]
+                if lane.l2_on:
+                    l2l = (ln * l1_line[c]) // lane.l2_line
+                    d2 = lane.l2_sets[l2l % lane.l2_nsets]
+                    tg2 = l2l // lane.l2_nsets
+                    r2 = d2.get(tg2)
+                    if r2 is not None and r2 <= ra:
+                        del d2[tg2]       # touch: move to MRU
+                        d2[tg2] = r2
+                        lane.l2_hits += 1
+                        fill = ra + lane.l2_hit_lat
+                    else:
+                        lane.dram += 1
+                        fill = ra + lane.bus_latency
+                        bl = lane.bus_last + lane.l2_occ
+                        if fill < bl:
+                            fill = bl
+                        lane.bus_last = fill
+                        if r2 is not None:
+                            del d2[tg2]
+                        elif len(d2) >= lane.l2_ways:
+                            del d2[next(iter(d2))]
+                        d2[tg2] = fill
+                else:
+                    lane.dram += 1
+                    fill = ra + lane.bus_latency
+                    bl = lane.bus_last + lane.l1_occ[c]
+                    if fill < bl:
+                        fill = bl
+                    lane.bus_last = fill
+                if rl and fill < rl[-1]:
+                    _insort(rl, fill)
+                else:
+                    rl.append(fill)
+                pf_outcome = lane.pf_outcome
+                pf_id = len(pf_outcome)
+                lane.pf_records.append((c, ln, w_j[widx]))
+                pf_outcome.append("pending")
+                ways = fs_ways[fs]
+                if ways > 0:
+                    if len(d) >= ways:
+                        victim = d.pop(next(iter(d)))
+                        if victim[1] and victim[2] >= 0:
+                            pf_outcome[victim[2]] = "evicted"
+                    d[tg] = [fill, True, pf_id]
+                lane.prefetch_issued += 1
+            if dmiss:
+                jj = w_j[widx]
+                dummy[jj] = dummy_get(jj, 0) | dmiss
+            if (0 < nh < n_coh) or (nadm and nrej):
+                ops_micro += 1             # mixed residency / admission
+        cur = seg_end
+
+    counters[2] = ops_total
+    counters[3] = ops_micro
+
+
+def _run_lockstep(g: _Columns, cfgs, stats_list) -> list:
+    """Advance every lane of the group together over the demand work list.
+
+    Each op reads the shared columns once; every lane then runs its own
+    probe/miss microstep against its flat-set dicts.  Lanes that stall at
+    the same access walk the runahead window together
+    (:func:`_lockstep_window`).
+    """
+    L = len(cfgs)
+    lanes = [_LaneState(g, cfg) for cfg in cfgs]
+    n_iters = g.n_iters
+    ii = g.ii
+    for stats in stats_list:
+        stats.compute_cycles = n_iters * ii
+
+    a_j = g.a_j
+    a_c = g.a_c
+    a_fs = g.a_fs
+    a_tag = g.a_tag
+    a_line = g.a_line
+    a_store = g.a_store
+    starts = g.starts
+    base = g.base
+    fs_ways = g.fs_ways
+    l1_line = g.l1_line
+
+    sets_L = [ln.sets for ln in lanes]
+    mshr_L = [ln.mshr_ready for ln in lanes]
+    ent_L = [ln.entries for ln in lanes]
+    pfout_L = [ln.pf_outcome for ln in lanes]
+    S_L = [0] * L
+    stall_L = [0] * L
+    hits_L = [0] * L
+    miss_L = [0] * L
+    cov_L = [0] * L
+    unc_L = [0] * L
+    pfu_L = [0] * L
+    rng = range(L)
+    # group counters: [windows, shared_windows, lockstep_ops, microstep_ops]
+    counters = [0, 0, 0, 0]
+
+    for t, lo, hi in g.it_rows:
+        bt = base[t]
+        for idx in range(lo, hi):
+            fs = a_fs[idx]
+            tg = a_tag[idx]
+            st = a_store[idx]
+            stalled = None
+            for k in rng:
+                d = sets_L[k][fs]
+                ent = d.get(tg)
+                now = bt + S_L[k]
+                if ent is not None:
+                    del d[tg]             # touch: move to MRU
+                    d[tg] = ent
+                    if ent[1]:            # prefetched, first demand use
+                        ent[1] = False
+                        if ent[2] >= 0:
+                            pfout_L[k][ent[2]] = "used"
+                        pfu_L[k] += 1
+                        cov_L[k] += 1
+                    hits_L[k] += 1
+                    if st or ent[0] <= now:
+                        continue
+                    ready = ent[0]        # in-flight fill: partial wait
+                else:
+                    miss_L[k] += 1
+                    c = a_c[idx]
+                    rl = mshr_L[k][c]
+                    if rl:
+                        ip = _bisect_right(rl, now)
+                        if ip:
+                            del rl[:ip]
+                    # stall here if MSHR exhausted
+                    issue = now if len(rl) < ent_L[k] \
+                        else rl[len(rl) - ent_L[k]]
+                    ln = a_line[idx]
+                    lane = lanes[k]
+                    if lane.l2_on:
+                        l2l = (ln * l1_line[c]) // lane.l2_line
+                        d2 = lane.l2_sets[l2l % lane.l2_nsets]
+                        tg2 = l2l // lane.l2_nsets
+                        r2 = d2.get(tg2)
+                        if r2 is not None and r2 <= issue:
+                            del d2[tg2]
+                            d2[tg2] = r2
+                            lane.l2_hits += 1
+                            fill = issue + lane.l2_hit_lat
+                        else:
+                            lane.dram += 1
+                            fill = issue + lane.bus_latency
+                            bl = lane.bus_last + lane.l2_occ
+                            if fill < bl:
+                                fill = bl
+                            lane.bus_last = fill
+                            if r2 is not None:
+                                del d2[tg2]
+                            elif len(d2) >= lane.l2_ways:
+                                del d2[next(iter(d2))]
+                            d2[tg2] = fill
+                    else:
+                        lane.dram += 1
+                        fill = issue + lane.bus_latency
+                        bl = lane.bus_last + lane.l1_occ[c]
+                        if fill < bl:
+                            fill = bl
+                        lane.bus_last = fill
+                    if rl and fill < rl[-1]:
+                        _insort(rl, fill)
+                    else:
+                        rl.append(fill)
+                    ways = fs_ways[fs]
+                    if ways > 0:
+                        if len(d) >= ways:
+                            victim = d.pop(next(iter(d)))
+                            if victim[1] and victim[2] >= 0:
+                                pfout_L[k][victim[2]] = "evicted"
+                        d[tg] = [fill, False, -1]
+                    if st:
+                        if issue <= now:  # store buffer absorbs the miss
+                            continue
+                        ready = issue
+                    else:
+                        unc_L[k] += 1
+                        ready = fill
+                if ready > now:
+                    if stalled is None:
+                        stalled = []
+                    stalled.append((k, now, ready))
+            if stalled:
+                j = a_j[idx]
+                j0 = j + 1
+                ord0 = t if j0 < starts[t + 1] else t + 1
+                _lockstep_window(g, lanes, stalled, j0, ord0, j, counters)
+                for k, now, ready in stalled:
+                    stall_L[k] += ready - now
+                    S_L[k] = ready - bt
+
+    diags = []
+    for k in rng:
+        lane = lanes[k]
+        stats = stats_list[k]
+        stats.cycles = (base[n_iters - 1] + S_L[k]) if n_iters else 0
+        stats.stall_cycles = stall_L[k]
+        stats.spm_accesses = g.spm_accesses
+        stats.l1_hits = hits_L[k]
+        stats.l1_misses = miss_L[k]
+        stats.l2_hits = lane.l2_hits
+        stats.dram_accesses = lane.dram
+        stats.prefetch_issued = lane.prefetch_issued
+        stats.prefetch_used = pfu_L[k]
+        stats.covered_misses = cov_L[k]
+        stats.uncovered_misses = unc_L[k]
+        stats.runahead_entries = lane.runahead_entries
+        _engine._classify_prefetches(g.trace, cfgs[k], lane.pf_records,
+                                     lane.pf_outcome, stats)
+        diags.append({"mode": "lockstep", "windows": lane.runahead_entries})
+    windows, shared, ops, micro = counters
+    diags[0]["group"] = {
+        "lanes": L,
+        "windows": windows,
+        "shared_windows": shared,
+        "lockstep_ops": ops,
+        "microstep_ops": micro,
+        "microstep_rate": (micro / ops) if ops else 0.0,
+    }
+    return diags
 
 
 def run_group(trace: Trace, cfgs, stats_list) -> list[dict]:
     """Simulate a group of runahead lanes sharing one L1 shape over
     ``trace``, mutating the matching ``stats_list`` entries.  Returns the
-    per-lane diagnostics (window speculation counts, divergence point).
+    per-lane diagnostics (the first lane of a lockstep group carries the
+    group's lockstep/microstep counters under ``"group"``).
     """
     g = _Columns(trace, cfgs[0])
     if len(cfgs) == 1:
         return [_run_lane(g, cfgs[0], stats_list[0])]
-    diags: list = [None] * len(cfgs)
-    ref = _reference_lane(cfgs)
-    log: list = []
-    diags[ref] = _run_lane(g, cfgs[ref], stats_list[ref], record=log)
-    for i, cfg in enumerate(cfgs):
-        if i != ref:
-            diags[i] = _run_lane(g, cfg, stats_list[i], log=log)
-    return diags
+    return _run_lockstep(g, cfgs, stats_list)

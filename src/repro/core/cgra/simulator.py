@@ -25,11 +25,11 @@ result statistics (:class:`Stats`), and the :func:`simulate` /
 :func:`simulate_batch` entry points.  The scalar stall/runahead walk lives
 in :mod:`repro.core.cgra._engine`; the lane-parallel batched engine (many
 demand configs over one trace per pass) lives in
-:mod:`repro.core.cgra._batch_engine`; the lane-parallel runahead engine
-(speculate-and-repair over stall windows) lives in
-:mod:`repro.core.cgra._runahead_engine`; both are bit-identical to the
-scalar walk.  Parallel/cached execution over many (trace, config) points
-lives in :mod:`repro.core.cgra.sweep`.
+:mod:`repro.core.cgra._batch_engine`; the columnar lane-lockstep runahead
+engine (all runahead lanes of an L1 shape advance together over shared
+trace columns) lives in :mod:`repro.core.cgra._runahead_engine`; both are
+bit-identical to the scalar walk.  Parallel/cached execution over many
+(trace, config) points lives in :mod:`repro.core.cgra.sweep`.
 """
 from __future__ import annotations
 
@@ -141,8 +141,8 @@ def simulate_batch(trace: Trace, cfgs) -> list[Stats]:
     faster for sweeps: non-runahead lanes advance together through the
     batched engine (shared content phase + per-lane timing replay, with
     vectorized SPM-only and iteration-advance fast paths); runahead lanes
-    advance per L1-shape group through the runahead engine (one reference
-    walk per group plus speculate-and-repair replays of the other lanes).
+    advance per L1-shape group through the columnar lockstep runahead
+    engine (all lanes of a group step together over shared trace columns).
     """
     from . import _batch_engine
 

@@ -15,8 +15,8 @@ This module turns that into a first-class operation:
   baselines, one per L1 shape for runahead configs) and dispatched to
   :func:`repro.core.cgra.simulate_batch`, which runs a whole batch in a
   single pass over the trace — non-runahead lanes through the batched
-  engine, runahead lanes through the speculate-and-repair runahead engine
-  (``REPRO_SWEEP_ENGINE=scalar`` forces everything down the golden
+  engine, runahead lanes through the columnar lane-lockstep runahead
+  engine (``REPRO_SWEEP_ENGINE=scalar`` forces everything down the golden
   one-task-per-point scalar path instead).
 * **Tasks run in parallel** across worker processes (``concurrent.futures``,
   *fork* context — workers inherit the parent's imports copy-on-write and
@@ -286,6 +286,10 @@ class SweepResult:
     cached: bool            # True when served from the store
     engine: str = "scalar"  # "batched" | "runahead" | "scalar"
     seconds: float = 0.0    # this point's share of its task's wall-clock
+    cpu_seconds: float = 0.0  # this point's share of its task's CPU time
+    diag: dict | None = None  # runahead-engine diagnostics (computed points
+    #                           only; the first lane of a lockstep group
+    #                           carries the group counters under "group")
 
 
 #: per-process trace memo (worker processes are reused across map chunks and
@@ -352,39 +356,45 @@ def _lane_key(cfg: SimConfig, force_scalar: bool = False):
 
     ``None`` means "scalar fallback, one task per point" — only the forced
     golden-reference path (``REPRO_SWEEP_ENGINE=scalar``) uses it now.
-    Runahead configs group per L1 shape just like demand configs: the
-    runahead engine advances such a lane batch in one pass over the trace
-    (reference walk + speculate-and-repair replays).
+    Runahead configs group per L1 shape just like demand configs: exactly
+    the lanes the runahead engine can advance in columnar lockstep become
+    one task, so a heavy trace's independent runahead groups (an MSHR
+    sweep vs a reconfigured geometry) can run on different workers instead
+    of serializing inside one oversized task.
     """
     if force_scalar:
         return None
     if cfg.spm_only:
         return ("spm",)
     if cfg.runahead:
-        # one task carries every runahead lane of the trace; the runahead
-        # engine re-groups per L1 shape internally, and a single task means
-        # the worker builds the trace and its walker views exactly once
-        return ("ra",)
+        return ("ra", cfg.spm_bytes, cfg.n_caches,
+                tuple((c.ways, c.line, c.way_bytes) for c in cfg.l1_configs()))
     return ("cache", cfg.spm_bytes, cfg.n_caches,
             tuple((c.ways, c.line, c.way_bytes) for c in cfg.l1_configs()))
 
 
 def _run_batch(args: tuple[str, tuple[str, ...], bool]) \
-        -> tuple[list, dict, list, float]:
+        -> tuple[list, dict, list, float, float, list]:
     """Worker entry: one trace x a batch of SimConfig lanes.
 
     ``force_scalar`` travels inside the task (resolved once in the parent):
     pool workers are forked lazily and cached, so re-reading the environment
     here could disagree with the parent's routing decision.  The returned
     wall-clock covers the whole task (trace build included) so the caller
-    can attribute sweep time to engines (``BENCH_sim.json``).
+    can attribute sweep time to engines (``BENCH_sim.json``); the CPU time
+    alongside it separates engine compute from scheduler/SMT contention
+    (on a contended box task wall can be ~2x task CPU); the trailing
+    per-lane diagnostics carry the runahead engine's lockstep/microstep
+    counters.
     """
     import time
 
     spec_blob, cfg_blobs, force_scalar = args
     t0 = time.perf_counter()
+    c0 = time.process_time()
     tr = _trace_for(spec_blob)
     cfgs = [cfg_from_json(json.loads(b)) for b in cfg_blobs]
+    diags: list = [None] * len(cfgs)
     if force_scalar:
         stats = [simulate(tr, cfg) for cfg in cfgs]
         tags = ["scalar"] * len(cfgs)
@@ -392,9 +402,9 @@ def _run_batch(args: tuple[str, tuple[str, ...], bool]) \
         from . import _batch_engine
 
         stats = [Stats(name=tr.name) for _ in cfgs]
-        tags = _batch_engine.run_batch(tr, cfgs, stats)
+        tags = _batch_engine.run_batch(tr, cfgs, stats, diags)
     return ([s.to_dict() for s in stats], trace_meta(tr), tags,
-            time.perf_counter() - t0)
+            time.perf_counter() - t0, time.process_time() - c0, diags)
 
 
 def _auto_workers() -> int:
@@ -530,9 +540,11 @@ def sweep(points, *, store: SimCache | None = None,
             outs = list(ex.map(_run_batch, args, chunksize=1))
         else:
             outs = [_run_batch(a) for a in args]
-        for (tkey, idxs), (stats_ds, meta, tags, secs) in zip(order, outs):
+        for (tkey, idxs), (stats_ds, meta, tags, secs, cpu,
+                           diags) in zip(order, outs):
             share = secs / max(1, len(idxs))
-            for i, stats_d, tag in zip(idxs, stats_ds, tags):
+            cpu_share = cpu / max(1, len(idxs))
+            for i, stats_d, tag, diag in zip(idxs, stats_ds, tags, diags):
                 spec, cfg, spec_json, key = norm[i]
                 store.put(key, {"kind": "sim", "trace": spec_json,
                                 "cfg": cfg_to_json(cfg), "stats": stats_d,
@@ -541,7 +553,8 @@ def sweep(points, *, store: SimCache | None = None,
                 results[i] = SweepResult((spec, cfg), key,
                                          Stats.from_dict(stats_d), meta,
                                          cached=False, engine=tag,
-                                         seconds=share)
+                                         seconds=share,
+                                         cpu_seconds=cpu_share, diag=diag)
         store.flush_index()
     return [results[i] for i in range(len(norm))]
 

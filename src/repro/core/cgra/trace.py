@@ -220,6 +220,51 @@ class Trace:
             }
         return self._memo[key]
 
+    def geometry_lists(self, spm_bytes: int, n_caches: int,
+                       geometry: tuple) -> dict:
+        """Memoized per-L1-geometry columns of the runahead engine's work
+        lists: flat-set index, tag, line and cache id for both the demand
+        (``a_*``) and walker (``w_*``) lists.
+
+        ``geometry`` is ``((ways, line, way_bytes), ...)`` per cache.  The
+        *flat set* index concatenates every cache's sets into one axis
+        (``cum_sets[c] + set``), so the engines address per-lane way arrays
+        with a single precomputed subscript — no per-access cache indirection.
+        Lane groups share these columns across every lane and every task of
+        one (spm, n_caches, geometry); :func:`repro.core.cgra.sweep
+        .prewarm_traces` builds them pre-fork so workers inherit them
+        copy-on-write.
+        """
+        key = ("geom_lists", int(spm_bytes), int(n_caches), geometry)
+        if key not in self._memo:
+            lines_g = [g[1] for g in geometry]
+            sets_g = [max(1, g[2] // g[1]) for g in geometry]
+            cum = np.concatenate(([0], np.cumsum(sets_g)))[:-1]
+            cache_idx = self.cache_index(n_caches)
+            if len(set(zip(lines_g, sets_g))) == 1:
+                line = self.addr // lines_g[0]
+                nsets = sets_g[0]
+            else:
+                line = self.addr // np.asarray(lines_g,
+                                               dtype=np.int64)[cache_idx]
+                nsets = np.asarray(sets_g, dtype=np.int64)[cache_idx]
+            fs_arr = cum[cache_idx] + line % nsets
+            tag_arr = line // nsets
+            act = self.active_index(spm_bytes)
+            rel = self.walker_index(spm_bytes)
+            self._memo[key] = {
+                "cum_sets": cum.tolist(),
+                "a_c": cache_idx[act].tolist(),
+                "a_fs": fs_arr[act].tolist(),
+                "a_tag": tag_arr[act].tolist(),
+                "a_line": line[act].tolist(),
+                "w_c": cache_idx[rel].tolist(),
+                "w_fs": fs_arr[rel].tolist(),
+                "w_tag": tag_arr[rel].tolist(),
+                "w_line": line[rel].tolist(),
+            }
+        return self._memo[key]
+
     def last_line_use(self, n_caches: int, cache: int,
                       line_bytes: int) -> dict:
         """``line_addr -> last trace index`` for the accesses cache ``cache``

@@ -59,6 +59,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # some jax versions: [dict]
+            cost = cost[0] if cost else {}
         text = compiled.as_text()
 
     n_chips = 1

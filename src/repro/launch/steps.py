@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import sharding as shard_ctx
-from repro.models import api
+from repro.models import api, lm
 from repro.models.types import ModelConfig, ShapeConfig
 from repro.optim import adamw
 from repro.sharding.rules import MeshRules
@@ -48,8 +48,7 @@ def train_step(state: dict, batch: dict, cfg: ModelConfig,
             # all-gathers out of the accumulation loop, which would leave
             # every layer's full weights live simultaneously
             l, g = jax.value_and_grad(
-                lambda p: api.train_loss(
-                    jax.lax.optimization_barrier(p), mb, cfg))(params)
+                lambda p: api.train_loss(lm.grad_safe_barrier(p), mb, cfg))(params)
             g_acc = jax.tree.map(
                 lambda a, b: a + b.astype(jnp.float32), g_acc, g)
             return (g_acc, l_acc + l), None

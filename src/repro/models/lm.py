@@ -25,6 +25,31 @@ from .types import LayerSpec, ModelConfig
 Params = dict[str, Any]
 
 
+@jax.custom_vjp
+def grad_safe_barrier(x):
+    """``jax.lax.optimization_barrier`` that is transparent to ``grad``.
+
+    The raw primitive has no differentiation rule, so any barrier placed in
+    a trained path breaks ``jax.grad``.  The scheduling fence only needs to
+    exist in the *traced computations*: the forward trace keeps the
+    barrier, and the remat replay inside the backward pass re-traces that
+    same forward (barrier included), so the cotangent pass can treat the
+    op as identity.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _barrier_fwd(x):
+    return jax.lax.optimization_barrier(x), None
+
+
+def _barrier_bwd(_, ct):
+    return (ct,)
+
+
+grad_safe_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
 # ---------------------------------------------------------------------------
 # init
 # ---------------------------------------------------------------------------
@@ -132,12 +157,12 @@ def forward(params: Params, batch: dict, cfg: ModelConfig,
         x, aux = carry
         # barrier: stops XLA from hoisting per-step converts of the stacked
         # remat carries out of the backward loop (a whole-stack f32 copy)
-        x = jax.lax.optimization_barrier(x)
+        x = grad_safe_barrier(x)
         for p_idx, spec in enumerate(pattern):
             # tie this layer's weights to the previous layer's output so the
             # scheduler cannot gather every layer's FSDP weights up front
             # (peak memory = one layer's gathered weights, not period x)
-            gp, x = jax.lax.optimization_barrier((group_params[p_idx], x))
+            gp, x = grad_safe_barrier((group_params[p_idx], x))
             x, aux = layer_fns[p_idx](gp, x, aux, positions)
         return (x, aux), None
 

@@ -8,10 +8,11 @@ sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "scripts"))
 import perf_guard
 
 
-def _write(path, pps, run="cold_quick"):
-    path.write_text(json.dumps(
-        {"schema": 1, "runs": {run: {"points_per_sec": pps, "points": 88,
-                                     "sweep_seconds": 10.0}}}))
+def _write(path, pps, run="cold_quick", engines=None):
+    rec = {"points_per_sec": pps, "points": 88, "sweep_seconds": 10.0}
+    if engines is not None:
+        rec["engines"] = engines
+    path.write_text(json.dumps({"schema": 1, "runs": {run: rec}}))
 
 
 def test_no_warning_within_threshold(tmp_path, capsys):
@@ -39,6 +40,61 @@ def test_strict_mode_fails_on_regression(tmp_path):
                           "--fresh", str(tmp_path / "fresh.json"),
                           "--strict"])
     assert rc == 1
+
+
+def test_engine_regression_cannot_hide_behind_aggregate(tmp_path, capsys):
+    """A runahead-engine slowdown masked by a batched-engine speedup (the
+    aggregate even improves) must still trip the per-engine guard."""
+    _write(tmp_path / "base.json", 10.0, engines={
+        "batched": {"points": 68, "seconds": 10.0},     # 6.8 pts/s
+        "runahead": {"points": 20, "seconds": 10.0},    # 2.0 pts/s
+        "scalar": {"points": 0, "seconds": 0.0},
+    })
+    _write(tmp_path / "fresh.json", 12.0, engines={     # aggregate "better"
+        "batched": {"points": 68, "seconds": 4.0},      # 17.0 pts/s
+        "runahead": {"points": 20, "seconds": 25.0},    # 0.8 pts/s: -60%
+        "scalar": {"points": 0, "seconds": 0.0},
+    })
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json")])
+    out = capsys.readouterr().out
+    assert rc == 0                                 # warn-only by default
+    assert "::warning::runahead engine throughput regressed" in out
+    assert "batched" in out                        # improvement still shown
+
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json"),
+                          "--strict"])
+    assert rc == 1
+
+
+def test_engine_split_within_threshold_passes(tmp_path, capsys):
+    eng = {"batched": {"points": 68, "seconds": 10.0},
+           "runahead": {"points": 20, "seconds": 10.0}}
+    _write(tmp_path / "base.json", 10.0, engines=eng)
+    _write(tmp_path / "fresh.json", 9.0, engines={
+        "batched": {"points": 68, "seconds": 11.0},
+        "runahead": {"points": 20, "seconds": 12.0}})   # -17% < 30%
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json"),
+                          "--strict"])
+    assert rc == 0
+    assert "::warning::" not in capsys.readouterr().out
+
+
+def test_engines_with_no_points_are_skipped(tmp_path, capsys):
+    """Zero-point/zero-second engine splits (forced-scalar off, legacy
+    records without the split) must not divide by zero or warn."""
+    _write(tmp_path / "base.json", 10.0, engines={
+        "scalar": {"points": 0, "seconds": 0.0},
+        "runahead": {"points": 20, "seconds": 0.0}})    # legacy: no seconds
+    _write(tmp_path / "fresh.json", 10.0)               # no engines at all
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json"),
+                          "--strict"])
+    assert rc == 0
+    assert "::warning::" not in capsys.readouterr().out
+    assert perf_guard.engine_pps({"engines": None}) == {}
 
 
 def test_missing_records_skip_cleanly(tmp_path, capsys):

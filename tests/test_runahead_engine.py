@@ -1,19 +1,22 @@
-"""Invariant + property tests for the speculate-and-repair runahead engine.
+"""Invariant + property tests for the columnar lane-lockstep runahead engine.
 
 Three families, per the §3.2 walker semantics:
 
 * **Walker invariants** — no prefetch is ever issued for an SPM-resident or
   temp-storage address; dummy-ness propagates through ``addr_dep`` chains
   (a dummy address never yields a probe or a prefetch).  Checked against
-  the reference lane's recorded op log, which lists every prefetch
-  candidate the walker considered.
-* **Checkpoint/restore** — the L1 snapshot helpers round-trip content, LRU
-  order, fill times and prefetch flags exactly, and a lane that diverges
-  mid-window produces bit-identical stats to the scalar golden engine
-  (the restore path is what makes that possible).
-* **Group plumbing** — reference-lane election, diagnostics, and parity of
-  whole lane groups against per-lane scalar runs (randomized under
-  hypothesis, fixed examples otherwise).
+  the scalar lane's recorded op log, which lists every prefetch candidate
+  the walker considered.
+* **Lockstep primitives** — the flat-set LRU microstep (dict insertion
+  order == LRU order) matches the :class:`OracleCache` op-for-op on random
+  streams; the per-window MSHR admissibility precheck (``_admissible``)
+  never says "admissible is impossible" where the per-candidate scalar
+  admission would admit; the quantized window reach equals the golden
+  walker's iterate-and-stop loop.
+* **Group lockstep** — whole lane groups (MSHR/DRAM/L2-mixed) advanced in
+  lockstep are bit-identical to per-lane scalar runs (randomized under
+  hypothesis, fixed examples otherwise), timing-twin lanes never
+  microstep, and the group diagnostics report the lockstep counters.
 """
 import dataclasses
 
@@ -23,7 +26,7 @@ from hypothesis_compat import given, settings, st
 
 from repro.core.cgra import _runahead_engine as ra
 from repro.core.cgra import presets, simulate
-from repro.core.cgra.cache import CacheConfig
+from repro.core.cgra.cache import CacheConfig, OracleCache
 from repro.core.cgra.simulator import Stats, simulate_batch
 from repro.core.cgra.trace import Trace, _TraceBuilder, gcn_aggregate, \
     radix_hist
@@ -56,7 +59,7 @@ def _synth_trace(n_iters: int, seed: int, spm_heavy: bool = False) -> Trace:
 
 
 # ---------------------------------------------------------------------------
-# Walker invariants (via the reference op log)
+# Walker invariants (via the scalar lane's op log)
 # ---------------------------------------------------------------------------
 
 def _candidate_js(log):
@@ -129,64 +132,179 @@ def test_walker_invariants_random_traces(seed, n_iters, mshr):
 
 
 # ---------------------------------------------------------------------------
-# Checkpoint / restore
+# Lockstep primitives vs the scalar references
 # ---------------------------------------------------------------------------
 
-def test_l1_snapshot_round_trips_exactly():
-    tr = _synth_trace(200, seed=7)
-    g = ra._Columns(tr, RA_SMALL)
-    lane = ra._LaneState(g, RA_SMALL)
-    # fill with a mix of demand lines, prefetched lines and LRU order
-    lane.l1_sets[0][0][11] = [120, False, -1]
-    lane.l1_sets[0][0][3] = [95, True, 0]
-    lane.l1_sets[0][1][8] = [40, False, -1]
-    snap = ra.snapshot_lane_l1(lane.l1_sets)
-    # mutate everything a window can touch: LRU order, eviction, install
-    d = lane.l1_sets[0][0]
-    ent = d.pop(11)
-    d[11] = ent                        # touch -> MRU
-    del d[3]                           # evict
-    d[77] = [500, True, 1]             # prefetch install
-    lane.l1_sets[0][1].clear()
-    ra.restore_lane_l1(lane.l1_sets, snap)
-    assert list(lane.l1_sets[0][0].items()) == [(11, [120, False, -1]),
-                                                (3, [95, True, 0])]
-    assert list(lane.l1_sets[0][1].items()) == [(8, [40, False, -1])]
-    # LRU order (dict insertion order) must round-trip, not just membership
-    assert list(lane.l1_sets[0][0]) == [11, 3]
+def _flat_set_lru_demand_step(d, ways, tg):
+    """One demand access against a flat-set dict, exactly as the engine
+    steps it: probe + delete/reinsert touch, first-key victim install."""
+    ent = d.get(tg)
+    if ent is not None:
+        del d[tg]
+        d[tg] = ent
+        return True
+    if ways > 0:
+        if len(d) >= ways:
+            del d[next(iter(d))]
+        d[tg] = [0, False, -1]
+    return False
 
 
-def test_diverging_lane_repairs_to_scalar_parity():
-    """A lane whose MSHR diverges from the reference mid-run must restore
-    its window checkpoint and re-walk — ending bit-identical to the scalar
-    golden walk."""
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       ways=st.sampled_from([0, 1, 2, 4, 8]),
+       line=st.sampled_from([16, 64]),
+       n=st.integers(min_value=1, max_value=300))
+def test_flat_set_lru_step_matches_oracle_cache(seed, ways, line, n):
+    """The lockstep LRU microstep (flat-set dicts whose insertion order is
+    the LRU order) is the OracleCache op-for-op: same hit/miss stream AND
+    the same recency order after every access."""
+    cfg = CacheConfig(ways=ways, line=line, way_bytes=256)
+    rng = np.random.default_rng(seed)
+    addrs = rng.integers(0, 4096, size=n)
+    oracle = OracleCache(cfg)
+    sets = [{} for _ in range(cfg.sets)]
+    for a in addrs.tolist():
+        la = a // line
+        s, tg = la % cfg.sets, la // cfg.sets
+        assert _flat_set_lru_demand_step(sets[s], ways, tg) \
+            == oracle.access(a)
+        # dict insertion order (LRU..MRU) must equal the oracle's order
+        assert list(sets[s]) == oracle.sets[s]
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       entries=st.integers(min_value=1, max_value=8),
+       n_out=st.integers(min_value=0, max_value=12),
+       ii=st.sampled_from([1, 2, 3, 5]),
+       span=st.integers(min_value=1, max_value=200),
+       n_caches=st.sampled_from([1, 4]))
+def test_admission_precheck_never_contradicts_scalar_admission(
+        seed, entries, n_out, ii, span, n_caches):
+    """If ``_admissible`` says "inadmissible" at window open, then no
+    quantized walker clock inside the window could have been admitted by
+    the scalar per-candidate check (prune to ra, then len < entries)."""
+    import types
+
+    rng = np.random.default_rng(seed)
+    now = int(rng.integers(0, 1000))
+    deadline = now + span
+    rl = sorted(int(x) for x in rng.integers(1, now + 400, size=n_out))
+    lane = types.SimpleNamespace(
+        entries=entries,
+        mshr_ready=[list(rl) for _ in range(n_caches)])
+    adm = ra._admissible(lane, n_caches, now, deadline)
+    assert len(adm) == n_caches
+    # the precheck's prune-to-now must not disturb later >= now queries
+    assert lane.mshr_ready[0] == [x for x in rl if x > now]
+    if adm[0]:
+        return                          # one-directional property
+    for k in range((deadline - now) // ii + 2):
+        ra_clock = now + k * ii
+        if ra_clock >= deadline:
+            break
+        pruned = [x for x in rl if x > ra_clock]
+        assert len(pruned) >= entries, \
+            f"precheck rejected but clock {ra_clock} admits"
+
+
+@settings(max_examples=40, deadline=None)
+@given(now=st.integers(min_value=0, max_value=10_000),
+       stall=st.integers(min_value=1, max_value=500),
+       ii=st.sampled_from([1, 2, 3, 5, 7]))
+def test_reach_quantization_matches_golden_walker_loop(now, stall, ii):
+    """``ceil((deadline - now) / ii)`` iteration boundaries == the golden
+    walker's add-ii-per-boundary-and-stop loop."""
+    deadline = now + stall
+    c_stop = -((now - deadline) // ii)
+    # golden: the walker visits iteration ordinals 0.. while ra < deadline,
+    # adding ii at each boundary crossing
+    ra_clock, boundaries = now, 0
+    while True:
+        ra_clock += ii
+        if ra_clock >= deadline:
+            break
+        boundaries += 1
+    # ordinals visited = [0, boundaries]; c_stop bounds the half-open
+    # ordinal range the columnar engine walks
+    assert c_stop == boundaries + 1
+
+
+# ---------------------------------------------------------------------------
+# Group lockstep == per-lane scalar
+# ---------------------------------------------------------------------------
+
+def test_mshr_sweep_group_matches_scalar_per_lane():
+    """The fig-14 shape: one L1 geometry, MSHR-swept lanes.  Lockstep must
+    be bit-identical to the golden engine on every lane even though the
+    lanes' admission verdicts diverge in the first pressure window."""
     tr = _synth_trace(500, seed=11)
     cfgs = [dataclasses.replace(RA_SMALL, mshr=m) for m in (16, 4, 1)]
     stats = [Stats(name=tr.name) for _ in cfgs]
     diags = ra.run_group(tr, cfgs, stats)
     for cfg, got in zip(cfgs, stats):
         assert got == simulate(tr, cfg)
-    ref = ra._reference_lane(cfgs)
-    assert ref == 0                    # largest MSHR wins the election
-    assert diags[ref]["diverged_at"] is None
-    # at least one follower lane must actually have diverged + repaired
-    assert any(d["diverged_at"] is not None
-               for i, d in enumerate(diags) if i != ref)
+    grp = diags[0]["group"]
+    assert grp["lanes"] == 3
+    assert grp["windows"] >= max(s.runahead_entries for s in stats)
+    assert grp["shared_windows"] > 0           # lanes really stepped together
+    assert grp["microstep_ops"] > 0            # and really diverged per-op
+    assert 0.0 < grp["microstep_rate"] <= 1.0
+    assert all(d["mode"] == "lockstep" for d in diags)
 
 
-def test_timing_twin_lane_speculates_cleanly():
-    """A follower with identical timing parameters never diverges and
-    applies every reference window."""
+def test_timing_twin_lanes_never_microstep():
+    """Identical-timing lanes agree on every predicate: every window is
+    shared and the microstep counter stays at zero."""
     tr = _synth_trace(500, seed=13)
     cfgs = [RA_SMALL, dataclasses.replace(RA_SMALL)]   # twins
     stats = [Stats(name=tr.name) for _ in cfgs]
     diags = ra.run_group(tr, cfgs, stats)
     assert stats[0] == stats[1] == simulate(tr, cfgs[0])
-    follower = [d for i, d in enumerate(diags)
-                if i != ra._reference_lane(cfgs)][0]
-    assert follower["diverged_at"] is None
-    assert follower["walked_windows"] == 0
-    assert follower["applied_windows"] == stats[0].runahead_entries
+    grp = diags[0]["group"]
+    assert grp["microstep_ops"] == 0
+    assert grp["windows"] == grp["shared_windows"] == \
+        stats[0].runahead_entries
+
+
+def test_mixed_timing_group_matches_scalar_per_lane():
+    """DRAM-latency / L2 / bus / no-L2 variants of one L1 shape in a single
+    lockstep group (the parity-grid shape)."""
+    tr = _synth_trace(400, seed=17)
+    cfgs = [RA_SMALL,
+            dataclasses.replace(RA_SMALL, dram_latency=40),
+            dataclasses.replace(RA_SMALL, l2=None),
+            dataclasses.replace(RA_SMALL, dram_bus_bytes_per_cycle=4),
+            dataclasses.replace(RA_SMALL, l2_hit_latency=1, mshr=2)]
+    stats = [Stats(name=tr.name) for _ in cfgs]
+    ra.run_group(tr, cfgs, stats)
+    for cfg, got in zip(cfgs, stats):
+        assert got == simulate(tr, cfg)
+
+
+def test_multi_cache_lockstep_group_matches_scalar_per_lane():
+    """Multi-lane lockstep over a multi-cache (n_caches=4) geometry —
+    including a heterogeneous per-cache layout with a 0-way cache — takes
+    the general (non-``nc1``) branch of ``_lockstep_window`` (per-op
+    cache-indexed admissibility, no solo-tail handoff) and must stay
+    bit-identical to the golden engine on every lane."""
+    tr = gcn_aggregate("cora", max_edges=600)
+    rc = dataclasses.replace(presets.RECONFIG, runahead=True)
+    for base in (rc, dataclasses.replace(rc, l1_per_cache=(
+            CacheConfig(ways=1, line=16, way_bytes=512),
+            CacheConfig(ways=0, line=32, way_bytes=512),
+            CacheConfig(ways=8, line=128, way_bytes=512),
+            CacheConfig(ways=3, line=64, way_bytes=512)))):
+        cfgs = [base,
+                dataclasses.replace(base, mshr=1),
+                dataclasses.replace(base, dram_latency=40, l2=None)]
+        stats = [Stats(name=tr.name) for _ in cfgs]
+        diags = ra.run_group(tr, cfgs, stats)
+        assert all(d["mode"] == "lockstep" for d in diags)
+        assert diags[0]["group"]["lanes"] == 3
+        for cfg, got in zip(cfgs, stats):
+            assert got == simulate(tr, cfg)
 
 
 @settings(max_examples=10, deadline=None)
@@ -217,9 +335,13 @@ def test_simulate_batch_routes_runahead_groups():
         assert s == simulate(tr, cfg)
 
 
-def test_reference_lane_election():
-    cfgs = [dataclasses.replace(RA_SMALL, mshr=m) for m in (2, 8, 8, 1)]
-    assert ra._reference_lane(cfgs) == 1   # max mshr, first on ties
+def test_single_lane_group_runs_scalar_mode():
+    tr = _synth_trace(200, seed=23)
+    stats = [Stats(name=tr.name)]
+    diags = ra.run_group(tr, [RA_SMALL], stats)
+    assert diags[0]["mode"] == "scalar"
+    assert "group" not in diags[0]
+    assert stats[0] == simulate(tr, RA_SMALL)
 
 
 def test_spm_heavy_trace_compresses_walker_list():

@@ -146,15 +146,19 @@ def test_sweep_forced_scalar_matches_batched(tmp_path, monkeypatch):
 
 
 def test_runahead_points_group_into_lane_batch_tasks(tmp_path):
-    """Runahead points no longer fall back to one-scalar-task-per-point:
-    every runahead config of a trace shares one lane key (a single task;
-    the runahead engine re-groups per L1 shape inside it), and the
-    executed points come back tagged with the runahead engine."""
+    """Runahead points group into one task per L1 shape — exactly the lanes
+    the runahead engine advances in columnar lockstep — so a trace's
+    independent runahead groups can run on different workers.  Executed
+    points come back tagged with the runahead engine, and lockstep lanes
+    carry the group diagnostics."""
     ra = presets.RUNAHEAD
     ra_mshr = dataclasses.replace(ra, mshr=2)
     assert sw._lane_key(ra) is not None
     assert sw._lane_key(ra) == sw._lane_key(ra_mshr)       # one lane batch
     assert sw._lane_key(ra) == sw._lane_key(
+        dataclasses.replace(ra, dram_latency=40, l2=None))  # timing-only
+    # a different L1 shape is a different lockstep group -> its own task
+    assert sw._lane_key(ra) != sw._lane_key(
         dataclasses.replace(presets.RECONFIG, runahead=True))
     assert sw._lane_key(ra) != sw._lane_key(presets.CACHE_SPM)
     assert sw._lane_key(ra) != sw._lane_key(presets.SPM_ONLY_4K)
@@ -165,6 +169,13 @@ def test_runahead_points_group_into_lane_batch_tasks(tmp_path):
                    store=sw.SimCache(tmp_path), workers=0)
     assert [r.engine for r in res] == ["runahead", "runahead"]
     assert all(not r.cached for r in res)
+    assert [r.diag["mode"] for r in res] == ["lockstep", "lockstep"]
+    grp = next(r.diag["group"] for r in res if "group" in r.diag)
+    assert grp["lanes"] == 2 and grp["windows"] > 0
+    # cached replays carry no diagnostics (nothing was simulated)
+    res2 = sw.sweep([(TRACES["radix_hist_4k"], ra)],
+                    store=sw.SimCache(tmp_path), workers=0)
+    assert res2[0].cached and res2[0].diag is None
 
 
 # ---------------------------------------------------------------------------
