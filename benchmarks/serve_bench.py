@@ -1,0 +1,133 @@
+"""Continuous-batching serving benchmark -> ``BENCH_serve.json``.
+
+Drives the :class:`repro.serve.ServeEngine` on the smoke arch (qwen2-1.5b
+reduced; host CPU) with a seeded Poisson workload and records the serving
+headline numbers: sustained tokens/sec, TTFT and inter-token-latency
+percentiles, batch occupancy, preemption count and the page-leak check.
+
+Latency percentiles are measured on the engine's *virtual* clock (one step
+= measured mean step wall-time), so the record is stable across host
+noise while still being anchored to real step cost.  Like
+``BENCH_sim.json``, the file keeps one record per mode — ``quick``
+(REPRO_BENCH_QUICK=1: small workload, CI smoke) and ``full`` (the
+64-stream acceptance run) — and ``scripts/perf_guard.py`` compares fresh
+records against the committed ones with per-metric directions
+(tokens/sec up-is-good, p99 latency down-is-good).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+BENCH_SERVE = ROOT / "BENCH_serve.json"
+
+QUICK = bool(os.environ.get("REPRO_BENCH_QUICK"))
+
+
+def build_engine():
+    import jax
+
+    from repro.configs import registry
+    from repro.models import api
+    from repro.serve import ServeEngine
+
+    cfg = registry.smoke("qwen2-1.5b")
+    params = api.init_params(jax.random.key(0), cfg)
+    slots = 4 if QUICK else 8
+    return cfg, ServeEngine(cfg, params, slots=slots, max_len=96,
+                            page_size=8, prefill_chunk=16)
+
+
+def measure_step_seconds(engine, cfg) -> float:
+    """Mean wall-time of a warm decode step (compile excluded)."""
+    reqs = [engine.submit([i + 1, i + 2, i + 3], max_new_tokens=24)
+            for i in range(engine.n_slots)]
+    while any(r.state.value == "prefill" for r in reqs) or \
+            any(r.state.value == "queued" for r in reqs):
+        engine.step()
+    t0 = time.perf_counter()
+    n = 0
+    while engine.sched.has_work():
+        engine.step()
+        n += 1
+    dt = (time.perf_counter() - t0) / max(1, n)
+    engine.assert_no_leaks()
+    return dt
+
+
+def run() -> dict:
+    from repro.serve import drive, poisson_workload
+    from repro.serve.metrics import EngineMetrics, summarize_ms
+
+    cfg, engine = build_engine()
+    step_seconds = measure_step_seconds(engine, cfg)
+    engine.finished.clear()                    # drop the warm-up requests
+    engine.metrics = EngineMetrics()
+
+    n_requests = 16 if QUICK else 96
+    specs = poisson_workload(
+        n_requests, rate_rps=2.0 / step_seconds, seed=7,
+        vocab_size=cfg.vocab_size, prompt_len=(4, 40), out_len=(8, 48))
+    t0 = time.perf_counter()
+    res = drive(engine, specs, seconds_per_step=step_seconds)
+    wall = time.perf_counter() - t0
+    engine.assert_no_leaks()
+
+    reqs = [r for r in engine.finished if r.state.value == "finished"]
+    ttfts = [r.metrics.ttft for r in reqs if r.metrics.ttft is not None]
+    itls = [i for r in reqs for i in r.metrics.itls]
+    virtual = res["steps"] * step_seconds
+    m = engine.metrics
+    record = {
+        "arch": cfg.name,
+        "requests": n_requests,
+        "completed": len(reqs),
+        "slots": engine.n_slots,
+        "steps": res["steps"],
+        "step_ms": round(step_seconds * 1e3, 3),
+        "wall_seconds": round(wall, 3),
+        "tokens_per_sec": round(m.tokens_sampled / virtual, 2),
+        "ttft_ms": {k: round(v, 3) for k, v in summarize_ms(ttfts).items()},
+        "itl_ms": {k: round(v, 3) for k, v in summarize_ms(itls).items()},
+        "occupancy_mean": round(m.occupancy_mean, 4),
+        "pool_util_mean": round(m.pool_util_mean, 4),
+        "peak_in_flight": m.peak_in_flight,
+        "preemptions": m.preemptions,
+        "backpressured": res["backpressured"],
+        "page_leaks": engine.pool.used_pages,
+    }
+    assert record["completed"] == n_requests, record
+    assert record["page_leaks"] == 0, record
+    if not QUICK:
+        # acceptance: >= 64 concurrent logical streams sustained
+        assert m.peak_in_flight >= 64, m.peak_in_flight
+    return record
+
+
+def write(record: dict) -> None:
+    try:
+        doc = json.loads(BENCH_SERVE.read_text())
+        if not isinstance(doc, dict) or not isinstance(doc.get("runs"), dict):
+            raise ValueError("malformed BENCH_serve.json")
+    except (OSError, ValueError):
+        doc = {"schema": 1, "runs": {}}
+    doc["runs"]["quick" if QUICK else "full"] = record
+    BENCH_SERVE.write_text(json.dumps(doc, indent=2) + "\n")
+
+
+def main() -> None:
+    record = run()
+    write(record)
+    for k in ("tokens_per_sec", "occupancy_mean", "peak_in_flight",
+              "preemptions", "page_leaks"):
+        print(f"{k},{record[k]}", flush=True)
+    print(f"ttft_p99_ms,{record['ttft_ms']['p99']}", flush=True)
+    print(f"itl_p99_ms,{record['itl_ms']['p99']}", flush=True)
+    print(f"wrote={BENCH_SERVE}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,15 @@
-"""Batched serving example: prefill + decode loop with a paged/dense KV
-cache, greedy sampling, on the host mesh.
+"""Serving example: the continuous-batching engine over a paged KV cache.
+
+Default path submits a handful of mixed-length requests to
+:class:`repro.serve.ServeEngine` — chunked prefill, slot-batched decode,
+per-request sampling temperatures, streamed tokens — and prints each
+request's stream plus the engine metrics.  ``--legacy`` keeps the old
+lockstep batch loop (every sequence same length, one shared position)
+for comparison.
 
 Usage:
-  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-  PYTHONPATH=src python examples/serve_lm.py --arch mamba2-2.7b --tokens 32
+  PYTHONPATH=src python examples/serve_lm.py --arch qwen2-1.5b
+  PYTHONPATH=src python examples/serve_lm.py --legacy --tokens 32
 """
 import argparse
 import time
@@ -13,21 +19,52 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
-from repro.launch.mesh import make_host_mesh
-from repro.launch.steps import build_serve_step
 from repro.models import api
-from repro.models.types import ShapeConfig
-from repro.sharding.rules import MeshRules
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2-1.5b",
-                    choices=registry.list_archs())
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=32)
-    ap.add_argument("--cache-len", type=int, default=256)
-    args = ap.parse_args()
+def run_engine(args):
+    from repro.serve import ServeEngine
+
+    cfg = registry.smoke(args.arch)
+    ok, why = api.serve_supported(cfg)
+    if not ok:
+        raise SystemExit(f"{cfg.name}: {why} (use --legacy)")
+    params = api.init_params(jax.random.key(0), cfg)
+    eng = ServeEngine(cfg, params, slots=args.batch, max_len=args.cache_len,
+                      page_size=16, prefill_chunk=16,
+                      backend=args.backend)
+
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(args.batch + 2):          # more requests than slots
+        plen = int(rng.integers(2, 24))
+        reqs.append(eng.submit(
+            rng.integers(0, cfg.vocab_size, plen).tolist(),
+            max_new_tokens=args.tokens,
+            temperature=0.8 if i % 2 else 0.0, seed=i,
+            stream_cb=(lambda tok, r: print(
+                f"  r{r.rid} -> {tok}", flush=True)) if args.stream else None))
+    t0 = time.time()
+    eng.run()
+    dt = time.time() - t0
+    eng.assert_no_leaks()
+    for r in reqs:
+        print(f"r{r.rid}: prompt[{len(r.prompt)}] -> {r.out_tokens[:10]}"
+              f"{'...' if len(r.out_tokens) > 10 else ''} "
+              f"({r.done_reason()}, ttft {r.metrics.ttft * 1e3:.0f} ms)")
+    m = eng.metrics.summary()
+    print(f"arch={cfg.name} backend={args.backend} "
+          f"{m['tokens_sampled']} tokens in {dt:.1f}s "
+          f"({m['tokens_sampled'] / dt:.0f} tok/s), "
+          f"occupancy {m['occupancy_mean']:.0%}, "
+          f"steps {m['steps']} ({m['prefill_chunks']} prefill chunks)")
+
+
+def run_legacy(args):
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.steps import build_serve_step
+    from repro.models.types import ShapeConfig
+    from repro.sharding.rules import MeshRules
 
     cfg = registry.smoke(args.arch)
     shape = ShapeConfig("serve_custom", "decode", args.cache_len, args.batch)
@@ -61,6 +98,26 @@ def main():
     print("first sequence:", seqs[0][:16], "...")
     assert seqs.shape == (args.batch, args.tokens + 1)
     assert int(cache["pos"] if "pos" in cache else 0) == args.tokens
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-1.5b",
+                    choices=registry.list_archs())
+    ap.add_argument("--batch", type=int, default=8,
+                    help="decode slots (engine) / batch size (--legacy)")
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--backend", default="paged", choices=("paged", "dense"))
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they stream (engine mode)")
+    ap.add_argument("--legacy", action="store_true",
+                    help="old lockstep batch loop instead of the engine")
+    args = ap.parse_args()
+    if args.legacy:
+        run_legacy(args)
+    else:
+        run_engine(args)
 
 
 if __name__ == "__main__":

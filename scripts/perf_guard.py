@@ -1,13 +1,18 @@
-"""Compare a fresh ``BENCH_sim.json`` against the committed perf record.
+"""Compare fresh benchmark records against the committed perf baselines.
 
-The sweep engine's throughput record (written by ``python -m
-benchmarks.run``) is committed at the repo root, so every PR carries the
-perf trajectory.  This guard re-reads a freshly produced record and warns
-when sweep throughput (``points_per_sec``) regressed by more than the
-threshold against the baseline for the same run name — both in aggregate
-and **per engine** (the ``engines`` split in the record): a runahead
-regression cannot hide behind a batched-engine improvement, because each
-engine's own points/sec is compared separately.
+Two committed records carry the repo's perf trajectory:
+
+* ``BENCH_sim.json`` (written by ``python -m benchmarks.run``) — sweep
+  throughput.  The guard warns when ``points_per_sec`` regressed by more
+  than the threshold against the baseline for the same run name — both in
+  aggregate and **per engine** (the ``engines`` split in the record): a
+  runahead regression cannot hide behind a batched-engine improvement,
+  because each engine's own points/sec is compared separately.
+* ``BENCH_serve.json`` (written by ``python -m benchmarks.serve_bench``) —
+  serving headline metrics, compared **per metric with a direction**:
+  ``tokens_per_sec`` up-is-good, ``ttft_ms.p99`` / ``itl_ms.p99``
+  down-is-good, ``page_leaks`` down-is-good (and a zero baseline means any
+  leak trips the guard).
 
 Non-fatal by default: CI machines differ from the machine that produced
 the committed record, so a warning is a prompt to look, not a gate.  Pass
@@ -19,7 +24,9 @@ Usage (what CI does)::
     cp BENCH_sim.json /tmp/bench_baseline.json     # before the benchmark
     REPRO_BENCH_QUICK=1 python -m benchmarks.run   # rewrites BENCH_sim.json
     python scripts/perf_guard.py --baseline /tmp/bench_baseline.json \
-        --fresh BENCH_sim.json --run cold_quick
+        --fresh BENCH_sim.json --run cold_quick \
+        --serve-baseline /tmp/serve_baseline.json \
+        --serve-fresh BENCH_serve.json --serve-run quick
 """
 from __future__ import annotations
 
@@ -29,20 +36,53 @@ import pathlib
 import sys
 
 DEFAULT_RUN = "cold_quick"
+DEFAULT_SERVE_RUN = "quick"
 DEFAULT_THRESHOLD = 0.30
 
+#: serving metrics to gate: dotted path into the record -> good direction
+SERVE_METRICS = {
+    "tokens_per_sec": "up",
+    "ttft_ms.p99": "down",
+    "itl_ms.p99": "down",
+    "page_leaks": "down",
+}
 
-def load_run(path: pathlib.Path, run: str) -> dict | None:
+
+def load_run(path: pathlib.Path, run: str,
+             require: str = "points_per_sec") -> dict | None:
     try:
         doc = json.loads(path.read_text())
     except (OSError, ValueError) as e:
         print(f"perf_guard: cannot read {path}: {e}")
         return None
     rec = doc.get("runs", {}).get(run)
-    if not isinstance(rec, dict) or not rec.get("points_per_sec"):
+    if not isinstance(rec, dict) or rec.get(require.split(".")[0]) is None:
         print(f"perf_guard: no usable {run!r} record in {path}")
         return None
     return rec
+
+
+def metric_value(rec: dict, dotted: str):
+    """Resolve a dotted metric path (e.g. ``ttft_ms.p99``) in a record."""
+    cur = rec
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur if isinstance(cur, (int, float)) else None
+
+
+def metric_regressed(base: float, fresh: float, direction: str,
+                     threshold: float) -> bool:
+    """Directional comparison: did ``fresh`` regress past the threshold?
+
+    ``up``: fresh below ``base * (1 - t)``.  ``down``: fresh above
+    ``base * (1 + t)`` — so a zero baseline (e.g. ``page_leaks``) makes
+    ANY increase a regression.
+    """
+    if direction == "up":
+        return fresh < base * (1.0 - threshold)
+    return fresh > base * (1.0 + threshold)
 
 
 def engine_pps(rec: dict) -> dict[str, float]:
@@ -61,6 +101,30 @@ def engine_pps(rec: dict) -> dict[str, float]:
     return out
 
 
+def check_serve(baseline: str, fresh_path: str, run: str,
+                threshold: float) -> bool:
+    """Direction-aware serving-metric comparison; returns regressed?"""
+    base = load_run(pathlib.Path(baseline), run, require="tokens_per_sec")
+    fresh = load_run(pathlib.Path(fresh_path), run, require="tokens_per_sec")
+    if base is None or fresh is None:
+        print("perf_guard: no serve records to compare (skipping)")
+        return False
+    regressed = False
+    for name, direction in SERVE_METRICS.items():
+        b, f = metric_value(base, name), metric_value(fresh, name)
+        if b is None or f is None:
+            continue
+        arrow = "^" if direction == "up" else "v"
+        line = f"perf_guard[serve/{run}] {name} ({arrow} good): {b} -> {f}"
+        if metric_regressed(b, f, direction, threshold):
+            print(f"::warning::serve {name} regressed >"
+                  f"{threshold:.0%}: {line}")
+            regressed = True
+        else:
+            print(line)
+    return regressed
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_sim.json.baseline",
@@ -74,15 +138,28 @@ def main(argv=None) -> int:
                          f"(default {DEFAULT_THRESHOLD:.0%})")
     ap.add_argument("--strict", action="store_true",
                     help="exit non-zero on regression instead of warning")
+    ap.add_argument("--serve-baseline", default=None,
+                    help="committed BENCH_serve.json to compare against "
+                         "(serve comparison skipped when omitted)")
+    ap.add_argument("--serve-fresh", default="BENCH_serve.json",
+                    help="serve record produced by the run just made")
+    ap.add_argument("--serve-run", default=DEFAULT_SERVE_RUN,
+                    help="serve run name to compare "
+                         f"(default {DEFAULT_SERVE_RUN})")
     args = ap.parse_args(argv)
+
+    serve_regressed = (
+        check_serve(args.serve_baseline, args.serve_fresh, args.serve_run,
+                    args.threshold)
+        if args.serve_baseline else False)
 
     base = load_run(pathlib.Path(args.baseline), args.run)
     fresh = load_run(pathlib.Path(args.fresh), args.run)
     if base is None or fresh is None:
         print("perf_guard: nothing to compare (skipping)")
-        return 0
+        return 1 if (serve_regressed and args.strict) else 0
 
-    regressed = False
+    regressed = serve_regressed
     b, f = base["points_per_sec"], fresh["points_per_sec"]
     ratio = f / b
     line = (f"perf_guard[{args.run}]: baseline {b} pts/s "

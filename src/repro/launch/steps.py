@@ -142,6 +142,72 @@ def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
                      rules)
 
 
+@dataclasses.dataclass
+class ServeSteps:
+    """Jitted step pair + cache factory for the continuous-batching engine.
+
+    ``decode(params, tokens, active, temps, key_data, cache)`` and
+    ``prefill(params, tokens, n_valid, slot, temp, key_data, cache)`` both
+    donate the cache argument, so the page pools are updated in place
+    across engine steps.  Shapes are fixed at build time (slot count,
+    padded cache length, prefill chunk), so each step compiles exactly
+    once no matter how the batch composition churns.
+    """
+
+    decode: Any
+    prefill: Any
+    init_cache: Any          # () -> concrete serve-cache pytree
+    cache_abs: Any
+    meta: dict
+
+
+def build_serve_engine_steps(cfg: ModelConfig, *, slots: int, max_len: int,
+                             backend: str = "paged", page_size: int = 16,
+                             n_pages: int | None = None,
+                             attn_read: str = "gather",
+                             sampling: bool = True,
+                             return_logits: bool = False,
+                             rules: MeshRules | None = None) -> ServeSteps:
+    """Assemble the continuous-batching serve steps (paged or dense cache).
+
+    With ``rules`` the model's activation constraints are installed (the
+    engine then runs under that mesh); without, the steps are plain jits
+    for single-process serving and tests.
+    """
+    import contextlib
+
+    def ctx():
+        return (shard_ctx.constrainer(rules.constrain_fn()) if rules
+                else contextlib.nullcontext())
+
+    def make_cache():
+        return api.init_serve_cache(cfg, slots=slots, max_len=max_len,
+                                    backend=backend, page_size=page_size,
+                                    n_pages=n_pages)
+
+    def decode_fn(params, tokens, active, temps, key_data, cache):
+        with ctx():
+            return api.serve_decode(params, tokens, active, temps, key_data,
+                                    cache, cfg, attn_read=attn_read,
+                                    sampling=sampling,
+                                    return_logits=return_logits)
+
+    def prefill_fn(params, tokens, n_valid, slot, temp, key_data, cache):
+        with ctx():
+            return api.serve_prefill(params, tokens, n_valid, slot, temp,
+                                     key_data, cache, cfg, sampling=sampling,
+                                     return_logits=return_logits)
+
+    return ServeSteps(
+        decode=jax.jit(decode_fn, donate_argnums=(5,)),
+        prefill=jax.jit(prefill_fn, donate_argnums=(6,)),
+        init_cache=jax.jit(make_cache),
+        cache_abs=jax.eval_shape(make_cache),
+        meta=dict(slots=slots, max_len=max_len, backend=backend,
+                  page_size=page_size, n_pages=n_pages, attn_read=attn_read),
+    )
+
+
 def build_step(cfg: ModelConfig, shape: ShapeConfig, rules: MeshRules) -> BuiltStep:
     if shape.kind == "train":
         return build_train_step(cfg, shape, rules)

@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from . import encdec, lm
+from . import encdec, lm, paged_lm
 from .types import ModelConfig, ShapeConfig
 
 
@@ -88,3 +88,34 @@ def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
     return jax.eval_shape(
         lambda: init_cache(cfg, shape.global_batch, shape.seq_len)
     )
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching serve path (slot batches over a paged / dense cache)
+# ---------------------------------------------------------------------------
+
+def serve_supported(cfg: ModelConfig) -> tuple[bool, str]:
+    """Whether the continuous-batching engine covers this arch."""
+    return paged_lm.serve_supported(cfg)
+
+
+def init_serve_cache(cfg: ModelConfig, *, slots: int, max_len: int,
+                     backend: str = "paged", page_size: int = 16,
+                     n_pages: int | None = None):
+    return paged_lm.init_serve_cache(cfg, slots=slots, max_len=max_len,
+                                     backend=backend, page_size=page_size,
+                                     n_pages=n_pages)
+
+
+def serve_decode(params, tokens, active, temps, key_data, cache,
+                 cfg: ModelConfig, **kw):
+    """Slot-batched decode step; see :func:`paged_lm.serve_decode_step`."""
+    return paged_lm.serve_decode_step(params, tokens, active, temps, key_data,
+                                      cache, cfg, **kw)
+
+
+def serve_prefill(params, tokens, n_valid, slot, temp, key_data, cache,
+                  cfg: ModelConfig, **kw):
+    """Chunked prefill for one slot; see :func:`paged_lm.serve_prefill_chunk`."""
+    return paged_lm.serve_prefill_chunk(params, tokens, n_valid, slot, temp,
+                                        key_data, cache, cfg, **kw)

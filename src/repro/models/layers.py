@@ -463,25 +463,41 @@ def blocked_attention(q, k, v, *, causal: bool, window: int | None = None,
                                 q_offset, triangular)
 
 
+def cache_attention(q, k_cache, v_cache, k_positions, q_positions, *,
+                    window: int | None = None) -> jax.Array:
+    """Attention of ``q`` [B,Hq,C,D] against a cache [B,Hkv,S,D] with
+    *per-row* positions: ``k_positions`` [1|B, S] holds each cache slot's
+    absolute position (-1 = empty), ``q_positions`` [1|B, C] each query's.
+    A cache slot participates iff its position is in [0, q_position] (and
+    inside the sliding window when given), so rows at different decode
+    depths — a continuous batch — share one einsum.  Softmax statistics
+    reduce over the cache length, so a sequence-sharded cache turns into
+    XLA all-reduces (distributed decode)."""
+    b, hq, c, d = q.shape
+    hkv = k_cache.shape[1]
+    rep = hq // hkv
+    qg = q.reshape(b, hkv, rep, c, d)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k_cache,
+                   preferred_element_type=jnp.float32) / np.sqrt(d)
+    kp = k_positions[:, None, None, None, :]       # [1|B,1,1,1,S]
+    qp = q_positions[:, None, None, :, None]       # [1|B,1,1,C,1]
+    valid = (kp >= 0) & (kp <= qp)
+    if window is not None:
+        valid &= qp - kp < window
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    y = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v_cache.dtype), v_cache)
+    return y.reshape(b, hq, c, d)
+
+
 def decode_attention(q, k_cache, v_cache, k_positions, *, pos,
                      window: int | None = None) -> jax.Array:
     """Single-token decode: q [B,Hq,1,D] against a (possibly ring) cache
-    [B,Hkv,S,D].  ``k_positions`` [S] holds each slot's absolute position
-    (-1 = empty).  Softmax statistics reduce over the cache length, so a
-    sequence-sharded cache turns into XLA all-reduces (distributed decode)."""
-    b, hq, _, d = q.shape
-    hkv = k_cache.shape[1]
-    rep = hq // hkv
-    qg = q.reshape(b, hkv, rep, 1, d)
-    s = jnp.einsum("bgrqd,bgkd->bgrqk", qg, k_cache,
-                   preferred_element_type=jnp.float32) / np.sqrt(d)
-    valid = (k_positions >= 0) & (k_positions <= pos)
-    if window is not None:
-        valid &= pos - k_positions < window
-    s = jnp.where(valid[None, None, None, None, :], s, -jnp.inf)
-    p = jax.nn.softmax(s, axis=-1)
-    y = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(v_cache.dtype), v_cache)
-    return y.reshape(b, hq, 1, d)
+    [B,Hkv,S,D] at one shared scalar position ``pos`` (the legacy serve
+    path; the continuous-batching engine calls :func:`cache_attention`
+    with per-slot positions directly)."""
+    return cache_attention(q, k_cache, v_cache, k_positions[None, :],
+                           jnp.full((1, 1), pos), window=window)
 
 
 def apply_attention(p: Params, x: jax.Array, positions: jax.Array,

@@ -1,0 +1,17 @@
+"""Continuous-batching serving engine over a paged KV cache.
+
+The serving-side instance of the paper's thesis: restructure computation
+around shared data movement instead of per-request state.  A global
+physical page pool (:mod:`paging`) replaces per-request KV allocations; a
+slot scheduler (:mod:`scheduler`) composes every jitted step's batch from
+whatever sequences are live; the engine (:mod:`engine`) drives the
+fixed-shape decode / chunked-prefill steps built by
+:func:`repro.launch.steps.build_serve_engine_steps`.
+
+See ARCHITECTURE.md ("The serving subsystem") for the full design.
+"""
+from .engine import Backpressure, ServeEngine          # noqa: F401
+from .loadgen import drive, poisson_workload           # noqa: F401
+from .paging import PagePool, PoolExhausted            # noqa: F401
+from .scheduler import (Request, RequestState,          # noqa: F401
+                        SamplingParams, Scheduler)

@@ -107,3 +107,77 @@ def test_missing_records_skip_cleanly(tmp_path, capsys):
     rc = perf_guard.main(["--baseline", str(tmp_path / "nope.json"),
                           "--fresh", str(tmp_path / "fresh.json")])
     assert rc == 0
+
+
+# ---------------------------------------------------------------------------
+# serve-record gating (BENCH_serve.json, per-metric directions)
+# ---------------------------------------------------------------------------
+
+def _write_serve(path, *, tps=1000.0, ttft_p99=50.0, itl_p99=5.0, leaks=0,
+                 run="quick"):
+    rec = {"tokens_per_sec": tps,
+           "ttft_ms": {"p50": ttft_p99 / 2, "p99": ttft_p99},
+           "itl_ms": {"p50": itl_p99 / 2, "p99": itl_p99},
+           "page_leaks": leaks}
+    path.write_text(json.dumps({"schema": 1, "runs": {run: rec}}))
+
+
+def _guard(tmp_path, extra=()):
+    return perf_guard.main(["--baseline", str(tmp_path / "nope.json"),
+                            "--fresh", str(tmp_path / "nope.json"),
+                            "--serve-baseline", str(tmp_path / "sbase.json"),
+                            "--serve-fresh", str(tmp_path / "sfresh.json"),
+                            *extra])
+
+
+def test_serve_within_threshold_passes(tmp_path, capsys):
+    _write_serve(tmp_path / "sbase.json")
+    _write_serve(tmp_path / "sfresh.json", tps=900.0, ttft_p99=60.0)  # <30%
+    rc = _guard(tmp_path, ["--strict"])
+    assert rc == 0
+    assert "::warning::" not in capsys.readouterr().out
+
+
+def test_serve_throughput_drop_warns(tmp_path, capsys):
+    _write_serve(tmp_path / "sbase.json")
+    _write_serve(tmp_path / "sfresh.json", tps=500.0)   # -50% up-is-good
+    assert _guard(tmp_path) == 0                        # warn-only default
+    assert "::warning::serve tokens_per_sec regressed" in \
+        capsys.readouterr().out
+    assert _guard(tmp_path, ["--strict"]) == 1
+
+
+def test_serve_latency_directions(tmp_path, capsys):
+    # latency DROPPING is an improvement, never a warning...
+    _write_serve(tmp_path / "sbase.json")
+    _write_serve(tmp_path / "sfresh.json", ttft_p99=10.0, itl_p99=1.0)
+    assert _guard(tmp_path, ["--strict"]) == 0
+    assert "::warning::" not in capsys.readouterr().out
+    # ...latency RISING past threshold is a regression
+    _write_serve(tmp_path / "sfresh.json", itl_p99=9.0)  # +80%
+    assert _guard(tmp_path, ["--strict"]) == 1
+    assert "::warning::serve itl_ms.p99 regressed" in capsys.readouterr().out
+
+
+def test_serve_any_page_leak_trips(tmp_path, capsys):
+    # zero-leak baseline: the relative threshold degenerates to "any leak"
+    _write_serve(tmp_path / "sbase.json", leaks=0)
+    _write_serve(tmp_path / "sfresh.json", leaks=1)
+    assert _guard(tmp_path, ["--strict"]) == 1
+    assert "::warning::serve page_leaks regressed" in capsys.readouterr().out
+
+
+def test_serve_missing_records_skip(tmp_path, capsys):
+    _write_serve(tmp_path / "sfresh.json")
+    rc = _guard(tmp_path)                  # no sbase.json on disk
+    assert rc == 0
+    assert "skipping" in capsys.readouterr().out
+
+
+def test_serve_comparison_off_by_default(tmp_path, capsys):
+    _write(tmp_path / "base.json", 10.0)
+    _write(tmp_path / "fresh.json", 10.0)
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 0
+    assert "serve" not in capsys.readouterr().out

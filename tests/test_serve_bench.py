@@ -1,0 +1,32 @@
+"""Opt-in serving load test (``pytest -m serve``).
+
+Runs the full 64+-stream Poisson acceptance workload from
+``benchmarks.serve_bench`` inside pytest — too slow for tier-1 (the
+``serve`` marker is deselected by default in pytest.ini), used by the CI
+serving smoke and for local soak runs.
+"""
+import pytest
+
+pytestmark = pytest.mark.serve
+
+
+def test_sustained_64_stream_load():
+    from benchmarks import serve_bench
+
+    record = serve_bench.run()      # asserts completion + zero page leaks
+    assert record["completed"] == record["requests"]
+    assert record["page_leaks"] == 0
+    if not serve_bench.QUICK:
+        assert record["peak_in_flight"] >= 64
+    assert record["tokens_per_sec"] > 0
+    assert record["occupancy_mean"] > 0.5
+
+
+def test_quick_record_schema():
+    from benchmarks import serve_bench
+
+    record = serve_bench.run()
+    for key in ("tokens_per_sec", "ttft_ms", "itl_ms", "occupancy_mean",
+                "preemptions", "page_leaks", "peak_in_flight"):
+        assert key in record
+    assert set(record["ttft_ms"]) == {"p50", "p99"}

@@ -1,0 +1,104 @@
+"""Page-pool accounting invariants (pure host-side, no jax).
+
+The pool's contract is exact accounting: free + owned partitions the
+usable pages after every allocate/free cycle, allocation is all-or-nothing
+under exhaustion, and page 0 (the null write-diversion page) is never
+handed out.  Randomized churn (hypothesis when installed) hammers the
+partition invariant.
+"""
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.serve.paging import PagePool, PoolExhausted
+
+
+def test_geometry_and_capacity():
+    pool = PagePool(n_pages=9, page_size=4)
+    assert pool.usable_pages == 8
+    assert pool.pages_for(1) == 1
+    assert pool.pages_for(4) == 1
+    assert pool.pages_for(5) == 2
+    assert pool.fits(32)
+    assert not pool.fits(33)
+    assert pool.utilization() == 0.0
+
+
+def test_null_page_never_granted():
+    pool = PagePool(n_pages=5, page_size=2)
+    granted = pool.ensure("a", 8)          # everything
+    assert sorted(granted) == [1, 2, 3, 4]
+    assert 0 not in granted
+    pool.check()
+
+
+def test_ensure_grows_incrementally():
+    pool = PagePool(n_pages=9, page_size=4)
+    first = pool.ensure("a", 4)
+    assert len(first) == 1
+    assert pool.ensure("a", 4) == []       # already covered
+    second = pool.ensure("a", 9)           # 3 pages total
+    assert len(second) == 2
+    assert pool.owned("a") == first + second
+    assert pool.used_pages == 3
+    pool.check()
+
+
+def test_all_or_nothing_exhaustion():
+    pool = PagePool(n_pages=4, page_size=1)
+    pool.ensure("a", 2)
+    free_before = pool.free_pages
+    with pytest.raises(PoolExhausted):
+        pool.ensure("b", 2)                # needs 2, only 1 free
+    assert pool.free_pages == free_before  # no partial grant
+    assert pool.owned("b") == []
+    pool.check()
+
+
+def test_free_returns_everything():
+    pool = PagePool(n_pages=9, page_size=4)
+    pool.ensure("a", 10)
+    pool.ensure("b", 5)
+    assert pool.free("a") == 3
+    assert pool.owned("a") == []
+    assert pool.free("a") == 0             # idempotent
+    pool.check()
+    pool.free("b")
+    assert pool.used_pages == 0
+    pool.check()
+
+
+def test_freed_pages_are_reused():
+    pool = PagePool(n_pages=4, page_size=1)
+    a = pool.ensure("a", 3)
+    pool.free("a")
+    b = pool.ensure("b", 3)
+    assert sorted(a) == sorted(b)          # recycled, not leaked
+
+
+def test_check_detects_corruption():
+    pool = PagePool(n_pages=5, page_size=1)
+    pool.ensure("a", 2)
+    pool._owned["a"].append(pool._owned["a"][0])   # duplicate ref
+    with pytest.raises(AssertionError):
+        pool.check()
+
+
+@given(st.lists(st.tuples(st.integers(0, 7), st.integers(0, 40)),
+                min_size=1, max_size=60))
+@settings(max_examples=50, deadline=None)
+def test_random_churn_preserves_partition(ops):
+    pool = PagePool(n_pages=17, page_size=4)
+    for owner, n_tokens in ops:
+        if n_tokens == 0:
+            pool.free(owner)
+        else:
+            try:
+                pool.ensure(owner, n_tokens)
+            except PoolExhausted:
+                pool.free(owner)
+        pool.check()
+    for owner in range(8):
+        pool.free(owner)
+    assert pool.used_pages == 0
+    pool.check()
