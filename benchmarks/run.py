@@ -30,14 +30,15 @@ import time
 
 from . import (common, fig11_exec_time, fig12_cache_sweeps, fig13_runahead,
                fig14_mshr, fig15_accuracy, fig16_coverage, fig17_reconfig,
-               motivation)
+               fig18_frontier, motivation)
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 SUMMARY = ROOT / "artifacts" / "bench_summary.json"
 BENCH_SIM = ROOT / "BENCH_sim.json"
 
 FIGURES = (motivation, fig11_exec_time, fig12_cache_sweeps, fig13_runahead,
-           fig14_mshr, fig15_accuracy, fig16_coverage, fig17_reconfig)
+           fig14_mshr, fig15_accuracy, fig16_coverage, fig17_reconfig,
+           fig18_frontier)
 
 
 def sweep_points() -> list:
@@ -48,7 +49,7 @@ def sweep_points() -> list:
     return list(dict.fromkeys(pts))
 
 
-def write_bench_sim(total_seconds: float) -> dict:
+def write_bench_sim(total_seconds: float, frontier: dict | None = None) -> dict:
     """Persist this run's sweep-perf record to ``BENCH_sim.json``.
 
     The file keeps one record per (cache regime x mode) — ``cold_quick``,
@@ -95,6 +96,15 @@ def write_bench_sim(total_seconds: float) -> dict:
     name = ("cold" if computed >= rep["cached"] else "warm") \
         + ("_quick" if common.QUICK else "_full")
     doc["runs"][name] = record
+    if frontier is not None:
+        # fig18 headline metrics per frontier kernel, keyed by mode: the
+        # simulated-behavior record perf_guard's frontier check reads
+        # (unlike "runs", these are machine-independent cycle ratios)
+        doc.setdefault("frontier", {})[
+            "quick" if common.QUICK else "full"] = {
+            kernel: {k: round(v, 4) if isinstance(v, float) else v
+                     for k, v in rec.items()}
+            for kernel, rec in frontier.items()}
     BENCH_SIM.write_text(json.dumps(doc, indent=2) + "\n")
     return record
 
@@ -119,12 +129,14 @@ def main() -> None:
     summary["fig15"] = fig15_accuracy.run()
     summary["fig16"] = fig16_coverage.run()
     summary["fig17"] = fig17_reconfig.run()
+    summary["fig18"] = fig18_frontier.run()
 
     from . import kernels_bench, roofline  # JAX-heavy: import after the sweep
     kernels_bench.run()
     rows = roofline.run()
     summary["roofline_cells"] = len(rows)
-    summary["bench_sim"] = write_bench_sim(time.time() - t0)
+    summary["bench_sim"] = write_bench_sim(time.time() - t0,
+                                           frontier=summary["fig18"])
     SUMMARY.parent.mkdir(parents=True, exist_ok=True)
     SUMMARY.write_text(json.dumps(summary, indent=2, default=float))
     print(f"total_bench_seconds,{(time.time() - t0) * 1e6:.0f},"

@@ -8,6 +8,9 @@ Two committed records carry the repo's perf trajectory:
   aggregate and **per engine** (the ``engines`` split in the record): a
   runahead regression cannot hide behind a batched-engine improvement,
   because each engine's own points/sec is compared separately.
+  The same file's ``frontier`` section (fig18) carries per-kernel
+  simulated-behavior ratios for the irregular-workload frontier;
+  ``runahead_speedup`` is compared per kernel, up-is-good.
 * ``BENCH_serve.json`` (written by ``python -m benchmarks.serve_bench``) —
   serving headline metrics, compared **per metric with a direction**:
   ``tokens_per_sec`` up-is-good, ``ttft_ms.p99`` / ``itl_ms.p99``
@@ -125,6 +128,46 @@ def check_serve(baseline: str, fresh_path: str, run: str,
     return regressed
 
 
+def check_frontier(baseline: pathlib.Path, fresh_path: pathlib.Path,
+                   mode: str, threshold: float) -> bool:
+    """Frontier-workload behavior comparison (``frontier`` section of
+    ``BENCH_sim.json``, written by ``benchmarks/fig18_frontier.py``).
+
+    Unlike the throughput checks these are *simulated-cycle ratios* —
+    machine-independent — so a drop means the modeled behavior changed,
+    not that CI got a slow runner.  Per kernel present in both records,
+    ``runahead_speedup`` is compared up-is-good; returns regressed?
+    """
+    def section(path):
+        try:
+            doc = json.loads(path.read_text())
+        except (OSError, ValueError):
+            return None
+        sec = (doc.get("frontier") or {}).get(mode)
+        return sec if isinstance(sec, dict) else None
+
+    base, fresh = section(baseline), section(fresh_path)
+    if base is None or fresh is None:
+        print(f"perf_guard: no frontier/{mode} sections to compare "
+              "(skipping)")
+        return False
+    regressed = False
+    for kernel in sorted(base.keys() & fresh.keys()):
+        b = metric_value(base[kernel], "runahead_speedup")
+        f = metric_value(fresh[kernel], "runahead_speedup")
+        if b is None or f is None:
+            continue
+        line = (f"perf_guard[frontier/{mode}] {kernel} "
+                f"runahead_speedup (^ good): {b} -> {f}")
+        if metric_regressed(b, f, "up", threshold):
+            print(f"::warning::frontier {kernel} runahead_speedup "
+                  f"regressed >{threshold:.0%}: {line}")
+            regressed = True
+        else:
+            print(line)
+    return regressed
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--baseline", default="BENCH_sim.json.baseline",
@@ -153,13 +196,20 @@ def main(argv=None) -> int:
                     args.threshold)
         if args.serve_baseline else False)
 
+    # frontier-behavior check rides the same record files as the
+    # throughput check; the mode is the run name's quick/full suffix
+    frontier_regressed = check_frontier(
+        pathlib.Path(args.baseline), pathlib.Path(args.fresh),
+        args.run.rsplit("_", 1)[-1], args.threshold)
+
     base = load_run(pathlib.Path(args.baseline), args.run)
     fresh = load_run(pathlib.Path(args.fresh), args.run)
     if base is None or fresh is None:
         print("perf_guard: nothing to compare (skipping)")
-        return 1 if (serve_regressed and args.strict) else 0
+        return 1 if ((serve_regressed or frontier_regressed)
+                     and args.strict) else 0
 
-    regressed = serve_regressed
+    regressed = serve_regressed or frontier_regressed
     b, f = base["points_per_sec"], fresh["points_per_sec"]
     ratio = f / b
     line = (f"perf_guard[{args.run}]: baseline {b} pts/s "

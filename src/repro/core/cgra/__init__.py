@@ -4,6 +4,8 @@ from .simulator import SimConfig, Stats, plan_spm, simulate
 from .trace import (KERNELS, RANDOM_DATA_KERNELS, REAL_DATA_KERNELS, Array,
                     Trace, gcn_aggregate, grad, perm_sort, radix_hist,
                     radix_update, random_access, rgb, src2dest)
+from .workloads import (FRONTIER_KERNELS, bfs_frontier, hash_join,
+                        mesh_gather, pagerank_push, random_trace)
 from . import presets
 from . import sweep
 
@@ -11,5 +13,7 @@ __all__ = [
     "Cache", "CacheConfig", "OracleCache", "SimConfig", "Stats", "plan_spm",
     "simulate", "KERNELS", "REAL_DATA_KERNELS", "RANDOM_DATA_KERNELS",
     "Array", "Trace", "gcn_aggregate", "grad", "perm_sort", "radix_hist",
-    "radix_update", "random_access", "rgb", "src2dest", "presets", "sweep",
+    "radix_update", "random_access", "rgb", "src2dest",
+    "FRONTIER_KERNELS", "bfs_frontier", "pagerank_push", "hash_join",
+    "mesh_gather", "random_trace", "presets", "sweep",
 ]

@@ -44,6 +44,10 @@ RECONFIG = SimConfig(
     runahead=False,
 )
 
+#: Reconfig system with runahead on — the full-featured point the frontier
+#: workloads (benchmarks/fig18_frontier.py) measure against.
+RECONFIG_RA = SimConfig(**{**RECONFIG.__dict__, "runahead": True})
+
 #: Fig. 12f storage-equivalence experiment: 2KB L1, 1KB SPM, 64B line, no L2.
 STORAGE_EXP = SimConfig(
     spm_bytes=1024,

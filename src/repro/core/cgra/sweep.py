@@ -31,7 +31,8 @@ Trace specs are picklable descriptions, never `Trace` objects:
 
 * ``"gcn_cora"`` — a name in :data:`repro.core.cgra.trace.KERNELS`;
 * ``("gcn_aggregate", {"dataset": "cora", "max_edges": 800})`` — a public
-  factory in :mod:`repro.core.cgra.trace` plus kwargs.
+  factory in :mod:`repro.core.cgra.trace` or
+  :mod:`repro.core.cgra.workloads` plus kwargs.
 
 Typical use (this is what ``benchmarks/common.py`` does)::
 
@@ -57,6 +58,7 @@ import tempfile
 from concurrent.futures import ProcessPoolExecutor
 
 from . import trace as trace_mod
+from . import workloads as workloads_mod
 from .cache import CacheConfig
 from .simulator import SimConfig, Stats, simulate, simulate_batch
 from .trace import Trace
@@ -69,9 +71,9 @@ SCHEMA_VERSION = 1
 #: flows into the key payload directly (spec/config canonicalization) or is
 #: covered by SCHEMA_VERSION (record shape), so orchestration-only edits —
 #: pool sizing, CLI — keep the store warm.
-_SRC_FILES = ("cache.py", "trace.py", "simulator.py", "_engine.py",
-              "_batch_engine.py", "_runahead_engine.py", "jaxcache.py",
-              "reconfig.py")
+_SRC_FILES = ("cache.py", "trace.py", "workloads.py", "simulator.py",
+              "_engine.py", "_batch_engine.py", "_runahead_engine.py",
+              "jaxcache.py", "reconfig.py")
 
 DEFAULT_ROOT = pathlib.Path(__file__).resolve().parents[4] / "artifacts" / "simcache"
 
@@ -106,11 +108,16 @@ def normalize_spec(spec) -> dict:
         return {"kernel": spec}
     if isinstance(spec, (tuple, list)) and len(spec) == 2:
         factory, kwargs = str(spec[0]), spec[1]
-        fn = getattr(trace_mod, factory, None)
-        if factory.startswith("_") or not callable(fn):
+        if factory.startswith("_") or not callable(_factory(factory)):
             raise KeyError(f"unknown trace factory {factory!r}")
         return {"factory": factory, "kwargs": dict(kwargs)}
     raise TypeError(f"bad trace spec {spec!r}: want name or (factory, kwargs)")
+
+
+def _factory(name: str):
+    """Resolve a public trace factory: Table-1 generators live in
+    :mod:`.trace`, the frontier/fuzz generators in :mod:`.workloads`."""
+    return getattr(trace_mod, name, None) or getattr(workloads_mod, name, None)
 
 
 def spec_label(spec_json: dict) -> str:
@@ -123,7 +130,7 @@ def spec_label(spec_json: dict) -> str:
 def build_trace(spec_json: dict) -> Trace:
     if "kernel" in spec_json:
         return trace_mod.KERNELS[spec_json["kernel"]]()
-    return getattr(trace_mod, spec_json["factory"])(**spec_json["kwargs"])
+    return _factory(spec_json["factory"])(**spec_json["kwargs"])
 
 
 def _cache_cfg_to_json(c: CacheConfig | None):

@@ -379,18 +379,28 @@ GCN_DATASETS: dict[str, tuple[int, int]] = {
 
 
 def _powerlaw_graph(n_nodes: int, n_edges: int, rng: np.random.Generator,
-                    alpha: float = 1.5) -> tuple[np.ndarray, np.ndarray]:
+                    alpha: float = 1.5, csr: bool = False):
     """CSR-ordered edge list with Zipf-distributed destinations.
 
     Sources are sorted (CSR iteration order -> ``edge_start`` is monotone, the
     regular stream the paper highlights); destinations follow a power law
     (graph hubs -> some cache reuse, most accesses irregular).
+
+    With ``csr=True`` also returns the ``[n_nodes + 1]`` row-pointer array, so
+    callers that walk per-node adjacency (the frontier workloads in
+    :mod:`repro.core.cgra.workloads`) share this generator instead of
+    re-deriving offsets from the sorted sources.
     """
     src = np.sort(rng.integers(0, n_nodes, size=n_edges))
     ranks = rng.zipf(alpha, size=n_edges) % n_nodes
     perm = rng.permutation(n_nodes)  # detach hub ids from low addresses
     dst = perm[ranks]
-    return src.astype(np.int64), dst.astype(np.int64)
+    src, dst = src.astype(np.int64), dst.astype(np.int64)
+    if not csr:
+        return src, dst
+    indptr = np.concatenate(
+        ([0], np.cumsum(np.bincount(src, minlength=n_nodes)))).astype(np.int64)
+    return src, dst, indptr
 
 
 # ---------------------------------------------------------------------------
@@ -601,7 +611,11 @@ def random_access(n: int = 16_384, table_elems: int = 262_144,
     return b.build()
 
 
-#: kernel registry: name -> zero-arg constructor (paper defaults)
+#: kernel registry: name -> zero-arg constructor (paper defaults).
+#: :mod:`repro.core.cgra.workloads` extends this dict at import time with the
+#: irregular-workload frontier families (BFS/PageRank, hash join, mesh
+#: gather); the package ``__init__`` imports it, so any import of
+#: ``repro.core.cgra`` (or a submodule) sees the full registry.
 KERNELS: dict[str, Callable[[], Trace]] = {
     "gcn_citeseer": lambda: gcn_aggregate("citeseer"),
     "gcn_cora": lambda: gcn_aggregate("cora"),

@@ -1,0 +1,189 @@
+"""Cross-engine differential fuzz harness: scalar == batched == runahead.
+
+The curated parity grid in ``tests/test_sweep.py`` pins the lane-parallel
+engines to the scalar golden walk over hand-picked kernels and Table-3
+configs.  This module asserts the same full-:class:`Stats` equality over
+*fuzzed* (trace, config) points: arbitrary structurally-valid traces from
+:func:`repro.core.cgra.workloads.random_trace` x configurations drawn from
+the whole envelope (SPM-only, multi-cache, heterogeneous ``l1_per_cache``
+with 0-way caches, MSHR starvation, no-L2, bus pressure, runahead lockstep
+cohorts) — parity by construction over the trace space, not just the grid.
+
+Two profiles:
+
+* **quick** (tier-1, always on): a deterministic seed sweep covering >= 200
+  (trace, config) points — CI runs this on every push.
+* **deep** (``-m fuzz``, opt-in): hypothesis drives the seed space open-
+  endedly (shrinking gives a minimal failing seed).  Skips cleanly when
+  hypothesis is not installed (``tests/hypothesis_compat.py``).
+
+Every failure reproduces from its seed alone:
+``random_trace(seed)`` + the printed config.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.core.cgra import _batch_engine, simulate
+from repro.core.cgra.cache import CacheConfig
+from repro.core.cgra.simulator import SimConfig, Stats, simulate_batch
+from repro.core.cgra.workloads import random_trace
+
+LINES = (16, 32, 64, 128)
+
+#: quick-profile seed sweep; with >= 3 configs per seed this clears the
+#: >= 200 fuzzed (trace, config) points the harness must cover in CI
+QUICK_SEEDS = tuple(range(64))
+
+
+def _random_cache(rng, allow_zero_ways: bool = True) -> CacheConfig:
+    line = int(rng.choice(LINES))
+    return CacheConfig(ways=int(rng.integers(0 if allow_zero_ways else 1, 9)),
+                       line=line,
+                       way_bytes=line * int(rng.choice((1, 2, 4, 8))))
+
+
+def random_config(rng) -> SimConfig:
+    """One structurally valid :class:`SimConfig` from the full envelope.
+
+    Constraints mirror what the hardware model defines: ``l2`` (when
+    present) has >= 1 way (a 0-way L2 is "no L2" — spelled ``l2=None``),
+    the uniform ``l1`` has >= 1 way, and 0-way L1s appear through
+    ``l1_per_cache`` (the §3.4 reconfiguration output that can starve one
+    cache entirely).
+    """
+    spm_bytes = int(rng.choice((0, 256, 1024, 4096)))
+    dram_latency = int(rng.integers(10, 121))
+    bus = int(rng.choice((1, 4, 16, 64)))
+    if rng.random() < 0.12:
+        return SimConfig(spm_bytes=spm_bytes or 1024, spm_only=True,
+                         dram_latency=dram_latency,
+                         dram_bus_bytes_per_cycle=bus)
+    n_caches = int(rng.integers(1, 5))
+    l1_per_cache = None
+    if n_caches > 1 and rng.random() < 0.35:
+        l1_per_cache = tuple(_random_cache(rng) for _ in range(n_caches))
+    l2 = None
+    if rng.random() < 0.7:
+        l2 = CacheConfig(ways=int(rng.integers(1, 9)),
+                         line=int(rng.choice((32, 64, 128))),
+                         way_bytes=int(rng.choice((4096, 16384))))
+    return SimConfig(
+        spm_bytes=spm_bytes, n_caches=n_caches,
+        l1=_random_cache(rng, allow_zero_ways=False),
+        l1_per_cache=l1_per_cache, l2=l2,
+        mshr=int(rng.choice((1, 2, 4, 16))),
+        runahead=bool(rng.random() < 0.5),
+        l2_hit_latency=int(rng.integers(1, 13)),
+        dram_latency=dram_latency,
+        dram_bus_bytes_per_cycle=bus)
+
+
+def fuzz_plan(seed: int) -> tuple:
+    """(trace, configs) for one seed: one free-draw config, plus a runahead
+    base with timing-only companions (same L1 shape -> they land in one
+    columnar lockstep group, so the group machinery — consensus, microstep,
+    co-stall window sharing — is under differential test, not just
+    single-lane runs)."""
+    rng = np.random.default_rng(1_000_003 * seed + 17)
+    tr = random_trace(seed)
+    cfgs = [random_config(rng)]
+    ra = dataclasses.replace(random_config(rng), spm_only=False,
+                             runahead=True)
+    cfgs.append(ra)
+    cfgs.append(dataclasses.replace(
+        ra, mshr=int(rng.choice((1, 2, 16))),
+        dram_latency=int(rng.integers(10, 121))))
+    if rng.random() < 0.5:
+        cfgs.append(dataclasses.replace(
+            ra, l2=None, dram_bus_bytes_per_cycle=int(rng.choice((1, 64)))))
+    return tr, cfgs
+
+
+def assert_engines_agree(tr, cfgs, seed) -> None:
+    batched = simulate_batch(tr, cfgs)
+    for cfg, got in zip(cfgs, batched):
+        want = simulate(tr, cfg)
+        assert got == want, (
+            f"engine divergence at seed={seed} cfg={cfg}:\n"
+            f"  batched path: {got}\n  scalar golden: {want}")
+
+
+# ---------------------------------------------------------------------------
+# Quick profile (tier-1): deterministic >= 200-point sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", QUICK_SEEDS)
+def test_differential_quick(seed):
+    tr, cfgs = fuzz_plan(seed)
+    assert_engines_agree(tr, cfgs, seed)
+
+
+def test_quick_profile_covers_at_least_200_points():
+    """The acceptance floor: the quick profile alone fuzzes >= 200
+    (trace, config) points through all three engines."""
+    assert sum(len(fuzz_plan(seed)[1]) for seed in QUICK_SEEDS) >= 200
+
+
+#: degenerate shapes the uniform seed sweep reaches only rarely
+EDGE_SHAPES = {
+    "single_access": dict(max_iters=1, max_per_iter=1),
+    "store_only": dict(p_store=1.0),
+    "chain_heavy": dict(p_dep=0.95, dep_window=64, p_store=0.1),
+    "one_hot_array": dict(max_arrays=1, max_elems=1),
+    "wide_iters": dict(max_iters=4, max_per_iter=24),
+    "no_deps": dict(p_dep=0.0),
+}
+
+
+@pytest.mark.parametrize("shape", sorted(EDGE_SHAPES))
+def test_differential_edge_shapes(shape):
+    for seed in range(4):
+        tr = random_trace(seed, **EDGE_SHAPES[shape])
+        rng = np.random.default_rng(seed + 99)
+        cfgs = [random_config(rng) for _ in range(3)]
+        assert_engines_agree(tr, cfgs, f"{shape}/{seed}")
+
+
+def test_engine_routing_tags():
+    """The batch dispatcher routes fuzzed lanes to the engine the sweep
+    would use (spm-only/demand -> batched, runahead -> runahead), and the
+    runahead lanes of one L1 shape really form a lockstep group."""
+    tr = random_trace(7)
+    ra = SimConfig(runahead=True)
+    cfgs = [SimConfig(spm_only=True, spm_bytes=1024), SimConfig(),
+            ra, dataclasses.replace(ra, mshr=1)]
+    stats = [Stats(name=tr.name) for _ in cfgs]
+    diags = [None] * len(cfgs)
+    tags = _batch_engine.run_batch(tr, cfgs, stats, diags)
+    assert tags == ["batched", "batched", "runahead", "runahead"]
+    grp = next(d["group"] for d in diags[2:] if d and "group" in d)
+    assert grp["lanes"] == 2
+    for cfg, got in zip(cfgs, stats):
+        assert got == simulate(tr, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Deep profile (opt-in: -m fuzz; hypothesis-optional)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fuzz
+@settings(max_examples=200, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_differential_deep(seed):
+    tr, cfgs = fuzz_plan(seed)
+    assert_engines_agree(tr, cfgs, seed)
+
+
+@pytest.mark.fuzz
+@settings(max_examples=60, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       shape=st.sampled_from(sorted(EDGE_SHAPES)))
+def test_differential_deep_edge_shapes(seed, shape):
+    tr = random_trace(seed, **EDGE_SHAPES[shape])
+    rng = np.random.default_rng(seed ^ 0xBADF00D)
+    cfgs = [random_config(rng) for _ in range(3)]
+    assert_engines_agree(tr, cfgs, f"{shape}/{seed}")

@@ -120,6 +120,19 @@ PARITY_TRACES = {
     "perm_3k": ("perm_sort", {"n": 3000, "key_range": 1024}),
     "radix_update_3k": ("radix_update", {"n": 3000, "n_buckets": 256}),
     "src2dest_2k": ("src2dest", {"n": 2048}),
+    # frontier workloads (workloads.py): pointer-chasing shapes with deep
+    # addr_dep chains the Table-1 kernels never produce — small enough that
+    # the full grid stays tier-1-fast, wide enough to hit the l1_per_cache
+    # (incl. the 0-way cache) and MSHR-starved columns above
+    "bfs_small": ("bfs_frontier", {"n_nodes": 512, "n_edges": 2048,
+                                   "max_edges": 2500}),
+    "pagerank_small": ("pagerank_push", {"n_nodes": 384, "n_edges": 1536,
+                                         "max_edges": 2000}),
+    "hash_join_small": ("hash_join", {"n_build": 256, "n_probe": 512,
+                                      "n_buckets": 64}),
+    "mesh_rcm_small": ("mesh_gather", {"nx": 16, "ny": 16}),
+    "mesh_shuf_small": ("mesh_gather", {"nx": 16, "ny": 16,
+                                        "numbering": "shuffled"}),
 }
 
 

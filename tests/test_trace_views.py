@@ -1,0 +1,166 @@
+"""Property tests for ``Trace``'s memoized derived views.
+
+Every engine consumes the views (``iter_starts``, ``iter_index``,
+``active_index``/``active_lists``, ``walker_index``/``walker_lists``,
+``geometry_lists``, ``arbitration_extra``, ``last_line_use``) instead of the
+five raw trace columns, so a bug in a view skews *all three engines at
+once* — the differential harness cannot see it.  This module re-derives
+each view naively (plain Python loops over ``pe/addr/is_store/addr_dep/
+iter_id``) and asserts equality, over both curated kernel traces and fuzzed
+traces, so future view additions or "optimizations" cannot silently change
+what the engines compute.
+"""
+import pytest
+
+from repro.core.cgra.trace import plan_spm, radix_hist, rgb
+from repro.core.cgra.workloads import (bfs_frontier, hash_join, mesh_gather,
+                                       random_trace)
+
+
+def _traces():
+    # kernel factories at reduced sizes + fuzzed shapes
+    return {
+        "rgb_512": rgb(n=512, palette_size=2048),
+        "radix_1k": radix_hist(n=1024, n_buckets=256),
+        "bfs_small": bfs_frontier(n_nodes=256, n_edges=1024, max_edges=1500),
+        "hash_join_small": hash_join(n_build=192, n_probe=256, n_buckets=32),
+        "mesh_small": mesh_gather(nx=12, ny=12),
+        "fuzz_0": random_trace(0),
+        "fuzz_3": random_trace(3),
+        "fuzz_9": random_trace(9, p_store=0.8, max_per_iter=12),
+    }
+
+
+TRACES = _traces()
+SPM_SIZES = (0, 512, 4096)
+GEOMETRIES = {
+    "uniform": (2, ((4, 64, 1024), (4, 64, 1024))),
+    "hetero": (3, ((1, 16, 512), (0, 32, 512), (8, 128, 512))),
+}
+
+
+@pytest.fixture(params=sorted(TRACES), name="tr")
+def _tr(request):
+    return TRACES[request.param]
+
+
+def test_iter_starts_and_iter_index(tr):
+    iter_id = tr.iter_id.tolist()
+    starts = [0] + [j for j in range(1, len(tr))
+                    if iter_id[j] != iter_id[j - 1]] + [len(tr)]
+    assert tr.iter_starts().tolist() == starts
+    ordinal, naive = 0, []
+    for j in range(len(tr)):
+        if j > 0 and iter_id[j] != iter_id[j - 1]:
+            ordinal += 1
+        naive.append(ordinal)
+    assert tr.iter_index().tolist() == naive
+
+
+@pytest.mark.parametrize("spm", SPM_SIZES)
+def test_active_and_walker_index(tr, spm):
+    mask = plan_spm(tr, spm).tolist()
+    assert tr.spm_mask(spm).tolist() == mask
+    active = [j for j in range(len(tr)) if not mask[j]]
+    assert tr.active_index(spm).tolist() == active
+    # walker-relevant: non-SPM, or a store (temp redirect), or dep-carrying
+    walker = [j for j in range(len(tr))
+              if not mask[j] or tr.is_store[j] or tr.addr_dep[j] >= 0]
+    assert tr.walker_index(spm).tolist() == walker
+
+
+@pytest.mark.parametrize("spm", SPM_SIZES)
+def test_active_lists(tr, spm):
+    d = tr.active_lists(spm)
+    active = tr.active_index(spm).tolist()
+    assert d["a_j"] == active
+    assert d["a_store"] == [bool(tr.is_store[j]) for j in active]
+    # (iteration ordinal, lo, hi) rows for iterations with demand work
+    starts = tr.iter_starts().tolist()
+    rows = []
+    for t in range(len(starts) - 1):
+        sel = [k for k, j in enumerate(active)
+               if starts[t] <= j < starts[t + 1]]
+        if sel:
+            rows.append((t, sel[0], sel[-1] + 1))
+    assert d["it_rows"] == rows
+
+
+@pytest.mark.parametrize("spm", SPM_SIZES)
+def test_walker_lists(tr, spm):
+    d = tr.walker_lists(spm)
+    rel = tr.walker_index(spm).tolist()
+    mask = tr.spm_mask(spm)
+    assert d["rel"] == rel
+    assert d["w_dep"] == [int(tr.addr_dep[j]) for j in rel]
+    assert d["w_store"] == [bool(tr.is_store[j]) for j in rel]
+    assert d["w_spm"] == [bool(mask[j]) for j in rel]
+    assert d["w_addr"] == [int(tr.addr[j]) for j in rel]
+    assert d["w_ord"] == [int(tr.iter_index()[j]) for j in rel]
+    starts = tr.iter_starts().tolist()
+    naive_bounds = [sum(1 for j in rel if j < s) for s in starts]
+    assert d["rel_bounds"] == naive_bounds
+
+
+@pytest.mark.parametrize("geom_name", sorted(GEOMETRIES))
+@pytest.mark.parametrize("spm", (0, 512))
+def test_geometry_lists(tr, spm, geom_name):
+    n_caches, geometry = GEOMETRIES[geom_name]
+    d = tr.geometry_lists(spm, n_caches, geometry)
+    sets_g = [max(1, wb // ln) for (_, ln, wb) in geometry]
+    cum = [0]
+    for s in sets_g[:-1]:
+        cum.append(cum[-1] + s)
+    assert d["cum_sets"] == cum
+
+    def naive(j):
+        c = int(tr.pe[j]) % n_caches
+        line = int(tr.addr[j]) // geometry[c][1]
+        return (c, cum[c] + line % sets_g[c], line // sets_g[c], line)
+
+    for prefix, idx in (("a", tr.active_index(spm)),
+                        ("w", tr.walker_index(spm))):
+        rows = [naive(j) for j in idx.tolist()]
+        assert d[f"{prefix}_c"] == [r[0] for r in rows]
+        assert d[f"{prefix}_fs"] == [r[1] for r in rows]
+        assert d[f"{prefix}_tag"] == [r[2] for r in rows]
+        assert d[f"{prefix}_line"] == [r[3] for r in rows]
+
+
+@pytest.mark.parametrize("spm", (0, 512))
+@pytest.mark.parametrize("n_caches", (1, 3))
+def test_arbitration_extra(tr, spm, n_caches):
+    got = tr.arbitration_extra(spm, n_caches).tolist()
+    mask = tr.spm_mask(spm)
+    starts = tr.iter_starts().tolist()
+    naive = []
+    for t in range(len(starts) - 1):
+        counts = [0] * n_caches
+        for j in range(starts[t], starts[t + 1]):
+            if not mask[j]:
+                counts[int(tr.pe[j]) % n_caches] += 1
+        naive.append(max(0, max(counts, default=0) - tr.ii))
+    assert got == naive
+
+
+@pytest.mark.parametrize("line_bytes", (16, 64))
+def test_last_line_use(tr, line_bytes):
+    n_caches = 2
+    for cache in range(n_caches):
+        got = tr.last_line_use(n_caches, cache, line_bytes)
+        naive = {}
+        for j in range(len(tr)):
+            if int(tr.pe[j]) % n_caches == cache:
+                naive[int(tr.addr[j]) // line_bytes] = j
+        assert got == naive
+
+
+def test_views_are_memoized(tr):
+    """Second calls return the same objects (the engines rely on the memo
+    for sweep-scale sharing; an accidental rebuild is a perf regression)."""
+    assert tr.iter_starts() is tr.iter_starts()
+    assert tr.active_lists(512) is tr.active_lists(512)
+    assert tr.walker_lists(512) is tr.walker_lists(512)
+    g = GEOMETRIES["uniform"]
+    assert tr.geometry_lists(512, g[0], g[1]) is \
+        tr.geometry_lists(512, g[0], g[1])
