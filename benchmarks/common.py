@@ -55,7 +55,16 @@ SWEEP_REPORT = {"seconds": 0.0, "points": 0, "cached": 0,
                 "scalar_cpu_seconds": 0.0,
                 "ra_lockstep_lanes": 0, "ra_scalar_lanes": 0,
                 "ra_groups": 0, "ra_windows": 0, "ra_shared_windows": 0,
-                "ra_lockstep_ops": 0, "ra_microstep_ops": 0}
+                "ra_lockstep_ops": 0, "ra_microstep_ops": 0,
+                # supervisor fault counters (runtime/supervisor.py): retries
+                # scheduled, worker-pool breaks, deadline kills, pool
+                # rebuilds, degraded scalar fallback tasks, points given up on
+                "retries": 0, "crashes": 0, "hangs": 0, "pool_rebuilds": 0,
+                "fallback_tasks": 0, "quarantined": 0}
+
+#: structured report of quarantined sweep points (label, key, attempts,
+#: final error) — lands in ``BENCH_sim.json`` under ``faults.failures``
+SWEEP_FAILURES: list[dict] = []
 
 
 def warm(points) -> None:
@@ -72,8 +81,13 @@ def warm(points) -> None:
     if not todo:
         return
     t0 = time.perf_counter()
-    for r in sweep_engine.sweep(todo, store=STORE):
+    for r in sweep_engine.sweep(todo, store=STORE, allow_partial=True):
         name, cfg = r.point
+        if r.error is not None:       # quarantined: report, don't memoize
+            SWEEP_FAILURES.append({"label": sweep_engine.spec_label(
+                sweep_engine.normalize_spec(name)), "key": r.key,
+                "error": r.error})
+            continue
         _stats[(name, cfg)] = r.stats
         _meta[name] = r.trace_meta
         if r.cached:
@@ -97,6 +111,9 @@ def warm(points) -> None:
                     SWEEP_REPORT["ra_microstep_ops"] += grp["microstep_ops"]
     SWEEP_REPORT["seconds"] += time.perf_counter() - t0
     SWEEP_REPORT["points"] += len(todo)
+    if sweep_engine.LAST_REPORT is not None:
+        for k, v in sweep_engine.LAST_REPORT.counters().items():
+            SWEEP_REPORT[k] += v
 
 
 def sim(name: str, cfg: SimConfig) -> Stats:
@@ -104,6 +121,10 @@ def sim(name: str, cfg: SimConfig) -> Stats:
     key = (name, cfg)
     if key not in _stats:
         warm([key])
+    if key not in _stats:      # quarantined by the sweep supervisor
+        raise RuntimeError(
+            f"sweep point {name!r} quarantined after retries "
+            f"(see SWEEP_FAILURES): {SWEEP_FAILURES[-1:]}")
     return _stats[key]
 
 

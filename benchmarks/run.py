@@ -86,6 +86,17 @@ def write_bench_sim(total_seconds: float, frontier: dict | None = None) -> dict:
         },
         "points_per_sec": round(rep["points"] / rep["seconds"], 2)
         if rep["seconds"] else None,
+        # supervisor fault/recovery accounting; failures lists the points
+        # quarantined this run (empty on a healthy run, capped at 20)
+        "faults": {
+            "retries": rep["retries"],
+            "crashes": rep["crashes"],
+            "hangs": rep["hangs"],
+            "pool_rebuilds": rep["pool_rebuilds"],
+            "fallback_tasks": rep["fallback_tasks"],
+            "quarantined": rep["quarantined"],
+            "failures": common.SWEEP_FAILURES[:20],
+        },
     }
     try:
         doc = json.loads(BENCH_SIM.read_text())

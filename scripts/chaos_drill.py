@@ -1,0 +1,130 @@
+"""CI chaos drill: the quick sweep must survive injected faults bit-exactly.
+
+For each requested chaos profile (see :data:`repro.runtime.chaos.PROFILES`)
+this drives the full quick-mode figure sweep — the same point union
+``benchmarks.run`` warms — into a throwaway simcache while the plan
+injects worker crashes, task hangs, or storage corruption, and asserts:
+
+* the sweep **completes without operator intervention** — zero quarantined
+  points (every injected fault was absorbed by retry / pool rebuild /
+  scalar fallback);
+* the per-point ``Stats`` are **bit-identical** to a fault-free baseline
+  sweep of the same points (chaos may cost retries, never results);
+* for storage-corruption profiles, a second, warm pass over the damaged
+  store quarantines the corrupt records, transparently recomputes them,
+  and still matches the baseline bit-exactly.
+
+Determinism: each profile runs under a seed-keyed :class:`ChaosPlan`, so a
+failing drill replays exactly from the seed printed in its summary line.
+
+Usage (what CI does)::
+
+    PYTHONPATH=src python scripts/chaos_drill.py            # default drills
+    PYTHONPATH=src python scripts/chaos_drill.py --profiles taskhang --seed 9
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pathlib
+import sys
+import tempfile
+import time
+
+# the drill process must stay JAX-free so the sweep can fork real workers
+# (see sweep._pool_for_sweep); default to a small pool even on 1-cpu runners
+# so crash/hang drills exercise BrokenProcessPool and deadline kills for real
+os.environ.setdefault("REPRO_SWEEP_WORKERS", "2")
+
+# repo root on sys.path: the ``benchmarks`` package lives there, not in src/
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+DEFAULT_PROFILES = ["workercrash", "taskhang", "cachecorrupt"]
+
+
+def run_sweep(points, root, plan, *, deadline=None):
+    """One full sweep of ``points`` into a fresh store under ``plan``."""
+    from repro.core.cgra import sweep as sw
+    store = sw.SimCache(root=root)
+    results = sw.sweep(points, store=store, chaos=plan, allow_partial=True,
+                       deadline=deadline)
+    rep = sw.LAST_REPORT
+    counters = rep.counters() if rep is not None else {}
+    return results, store, counters
+
+
+def stats_map(results) -> dict:
+    return {r.key: (None if r.stats is None else r.stats.to_dict())
+            for r in results}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--profiles", default=",".join(DEFAULT_PROFILES),
+                    help="comma-separated chaos profiles to drill")
+    ap.add_argument("--seed", type=int, default=20260808,
+                    help="chaos plan seed (printed for replay)")
+    ap.add_argument("--hang-deadline", type=float, default=10.0,
+                    help="fixed per-task deadline for hang profiles; the "
+                         "injected hang sleeps far past it")
+    args = ap.parse_args(argv)
+
+    os.environ["REPRO_BENCH_QUICK"] = "1"
+    from benchmarks.run import sweep_points
+    from repro.core.cgra import sweep as sw
+    from repro.runtime import chaos as chaos_mod
+
+    points = sweep_points()
+    failed = False
+    with tempfile.TemporaryDirectory(prefix="chaos_drill_") as tmp:
+        tmp = pathlib.Path(tmp)
+        t0 = time.perf_counter()
+        base_res, _, _ = run_sweep(points, tmp / "baseline", None)
+        base = stats_map(base_res)
+        assert all(v is not None for v in base.values()), \
+            "fault-free baseline sweep failed"
+        print(f"chaos_drill: baseline {len(points)} points in "
+              f"{time.perf_counter() - t0:.1f}s", flush=True)
+
+        for profile in args.profiles.split(","):
+            profile = profile.strip()
+            plan = chaos_mod.ChaosPlan(args.seed, profile,
+                                       chaos_mod.PROFILES[profile])
+            # injected hangs sleep ~30s; a tight fixed deadline keeps the
+            # drill fast and forces the supervisor's kill-and-retry path
+            deadline = args.hang_deadline if any(
+                r.kind == "hang" for r in plan.rules) else None
+            t0 = time.perf_counter()
+            root = tmp / profile
+            res, store, counters = run_sweep(points, root, plan,
+                                             deadline=deadline)
+            got = stats_map(res)
+            problems = []
+            if counters.get("quarantined"):
+                problems.append(f"{counters['quarantined']} quarantined")
+            if got != base:
+                diff = sum(1 for k in base if got.get(k) != base[k])
+                problems.append(f"{diff} points differ from baseline")
+
+            if profile == "cachecorrupt":
+                # second pass over the damaged store: corrupt records must
+                # quarantine + recompute, and the index must rebuild
+                res2, store2, _ = run_sweep(points, root, None)
+                if stats_map(res2) != base:
+                    problems.append("warm re-read differs from baseline")
+                counters["warm_quarantined"] = store2.quarantined
+                counters["index_entries"] = store2.rebuild_index()
+
+            status = "FAIL" if problems else "ok"
+            print(f"chaos_drill[{profile} seed={args.seed}]: {status} "
+                  f"({time.perf_counter() - t0:.1f}s) "
+                  + " ".join(f"{k}={v}" for k, v in sorted(counters.items()))
+                  + ("  << " + "; ".join(problems) if problems else ""),
+                  flush=True)
+            failed = failed or bool(problems)
+        sw.shutdown_pool()
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

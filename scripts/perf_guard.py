@@ -10,7 +10,14 @@ Two committed records carry the repo's perf trajectory:
   because each engine's own points/sec is compared separately.
   The same file's ``frontier`` section (fig18) carries per-kernel
   simulated-behavior ratios for the irregular-workload frontier;
-  ``runahead_speedup`` is compared per kernel, up-is-good.
+  ``runahead_speedup`` is compared per kernel, up-is-good.  Each run
+  record also carries the sweep supervisor's ``faults`` counters
+  (retries / crashes / hangs / quarantined, see
+  ``src/repro/runtime/supervisor.py``); the guard surfaces them and
+  warns when any point was quarantined — lost figure coverage that a
+  throughput ratio alone would hide.  Missing sections (old records,
+  serve/frontier files not produced) are reported and skipped, never a
+  ``KeyError``.
 * ``BENCH_serve.json`` (written by ``python -m benchmarks.serve_bench``) —
   serving headline metrics, compared **per metric with a direction**:
   ``tokens_per_sec`` up-is-good, ``ttft_ms.p99`` / ``itl_ms.p99``
@@ -58,7 +65,11 @@ def load_run(path: pathlib.Path, run: str,
     except (OSError, ValueError) as e:
         print(f"perf_guard: cannot read {path}: {e}")
         return None
-    rec = doc.get("runs", {}).get(run)
+    if not isinstance(doc, dict):
+        print(f"perf_guard: {path} is not a benchmark record (skipping)")
+        return None
+    runs = doc.get("runs")
+    rec = runs.get(run) if isinstance(runs, dict) else None
     if not isinstance(rec, dict) or rec.get(require.split(".")[0]) is None:
         print(f"perf_guard: no usable {run!r} record in {path}")
         return None
@@ -104,6 +115,34 @@ def engine_pps(rec: dict) -> dict[str, float]:
     return out
 
 
+def check_faults(fresh_path: pathlib.Path, run: str) -> bool:
+    """Surface the fresh record's supervisor fault counters (``faults``
+    section of ``BENCH_sim.json``); warn-only — quarantined points mean
+    the sweep lost coverage, which perf ratios alone would hide.  Returns
+    whether any point was quarantined."""
+    rec = load_run(fresh_path, run, require="points")
+    if rec is None:
+        return False
+    faults = rec.get("faults")
+    if not isinstance(faults, dict):
+        print(f"perf_guard: no faults section in {run!r} record "
+              "(pre-supervisor run; skipping)")
+        return False
+    counters = {k: faults.get(k, 0) for k in
+                ("retries", "crashes", "hangs", "pool_rebuilds",
+                 "fallback_tasks", "quarantined")}
+    line = f"perf_guard[{run}/faults]: " + " ".join(
+        f"{k}={v}" for k, v in counters.items())
+    failures = faults.get("failures") or []
+    if counters["quarantined"] or failures:
+        labels = ", ".join(str(f.get("label", "?")) for f in failures[:5])
+        print(f"::warning::sweep quarantined "
+              f"{counters['quarantined']} point(s) [{labels}]: {line}")
+        return True
+    print(line)
+    return False
+
+
 def check_serve(baseline: str, fresh_path: str, run: str,
                 threshold: float) -> bool:
     """Direction-aware serving-metric comparison; returns regressed?"""
@@ -142,6 +181,8 @@ def check_frontier(baseline: pathlib.Path, fresh_path: pathlib.Path,
         try:
             doc = json.loads(path.read_text())
         except (OSError, ValueError):
+            return None
+        if not isinstance(doc, dict):
             return None
         sec = (doc.get("frontier") or {}).get(mode)
         return sec if isinstance(sec, dict) else None
@@ -202,15 +243,23 @@ def main(argv=None) -> int:
         pathlib.Path(args.baseline), pathlib.Path(args.fresh),
         args.run.rsplit("_", 1)[-1], args.threshold)
 
+    # fault counters (warn-only, fresh record only: a baseline produced on
+    # another machine says nothing about THIS run's lost coverage)
+    quarantined = check_faults(pathlib.Path(args.fresh), args.run)
+
     base = load_run(pathlib.Path(args.baseline), args.run)
     fresh = load_run(pathlib.Path(args.fresh), args.run)
     if base is None or fresh is None:
         print("perf_guard: nothing to compare (skipping)")
-        return 1 if ((serve_regressed or frontier_regressed)
+        return 1 if ((serve_regressed or frontier_regressed or quarantined)
                      and args.strict) else 0
 
-    regressed = serve_regressed or frontier_regressed
+    regressed = serve_regressed or frontier_regressed or quarantined
     b, f = base["points_per_sec"], fresh["points_per_sec"]
+    if not b:
+        print(f"perf_guard: baseline {args.run!r} points_per_sec is "
+              f"{b!r} — nothing to ratio against (skipping)")
+        return 1 if regressed and args.strict else 0
     ratio = f / b
     line = (f"perf_guard[{args.run}]: baseline {b} pts/s "
             f"({base.get('points')} pts in {base.get('sweep_seconds')}s) -> "
@@ -228,6 +277,8 @@ def main(argv=None) -> int:
     # own points/sec, so a hot-engine regression cannot hide behind another
     # engine's improvement (or behind a point-mix shift)
     base_eng, fresh_eng = engine_pps(base), engine_pps(fresh)
+    if not (base_eng and fresh_eng):
+        print("perf_guard: no engine split to compare (skipping)")
     for name in sorted(base_eng.keys() & fresh_eng.keys()):
         be, fe = base_eng[name], fresh_eng[name]
         eratio = fe / be

@@ -57,13 +57,18 @@ import sys
 import tempfile
 from concurrent.futures import ProcessPoolExecutor
 
+from repro.runtime import chaos as chaos_mod
+from repro.runtime import supervisor as supervisor_mod
+
 from . import trace as trace_mod
 from . import workloads as workloads_mod
 from .cache import CacheConfig
 from .simulator import SimConfig, Stats, simulate, simulate_batch
 from .trace import Trace
 
-SCHEMA_VERSION = 1
+# v2: records carry a content checksum, verified (and corrupt entries
+# quarantined + recomputed) on every read
+SCHEMA_VERSION = 2
 
 #: source files whose content participates in every cache key; editing any of
 #: them invalidates all previously stored results.  This module itself is
@@ -183,86 +188,190 @@ def trace_meta(tr: Trace) -> dict:
 # The keyed result store
 # ---------------------------------------------------------------------------
 
+#: record keys that must be present (per record kind) for a read to count;
+#: a record missing them is corrupt — quarantined, never returned
+_REQUIRED_KEYS = {
+    "sim": ("trace", "cfg", "stats", "trace_meta"),
+    "reconfig": ("trace", "cfg", "allocations", "lines", "profit", "config"),
+}
+
+
+def _record_checksum(record: dict) -> str:
+    """Content checksum over the record minus its own ``checksum`` field."""
+    body = {k: v for k, v in record.items() if k != "checksum"}
+    blob = json.dumps(body, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
 class SimCache:
     """JSON-per-key result store under ``artifacts/simcache/``.
 
     Layout: ``<root>/<key[:2]>/<key>.json`` plus an advisory ``index.json``
     (digest + one summary line per entry; rebuildable from the key files).
     Lookups never trust the index: :meth:`get` reads the key file and
-    validates its schema/digest fields.
+    validates its schema/digest fields *and its content checksum* — a
+    truncated, bit-rotted, or key-incomplete record is quarantined to
+    ``<root>/quarantine/`` and reads as a miss, so the caller transparently
+    recomputes it.  A missing or unreadable ``index.json`` is rebuilt from
+    the shard files.
     """
 
     def __init__(self, root: str | os.PathLike | None = None):
         env = os.environ.get("REPRO_SIMCACHE")
         self.root = pathlib.Path(root if root is not None else env or DEFAULT_ROOT)
         self._index: dict | None = None
+        self.quarantined = 0        # corrupt records moved aside by this instance
 
     def path(self, key: str) -> pathlib.Path:
         return self.root / key[:2] / f"{key}.json"
 
+    @staticmethod
+    def _validate(text: str) -> tuple[dict | None, str | None]:
+        """Parse + verify one record body -> (record, corruption_reason).
+
+        ``(rec, None)`` — good; ``(None, None)`` — stale (old schema or
+        source digest: a plain miss, prune's business, not corruption);
+        ``(None, reason)`` — corrupt, quarantine it.
+        """
+        try:
+            rec = json.loads(text)
+        except ValueError as e:
+            return None, f"unparseable JSON: {e}"
+        if not isinstance(rec, dict):
+            return None, f"not a JSON object ({type(rec).__name__})"
+        if rec.get("schema") != SCHEMA_VERSION or rec.get("digest") != code_digest():
+            return None, None
+        if rec.get("checksum") != _record_checksum(rec):
+            return None, "checksum mismatch (torn write / bit rot)"
+        required = _REQUIRED_KEYS.get(rec.get("kind", "sim"), ("trace",))
+        missing = [k for k in required if k not in rec]
+        if missing:
+            return None, f"missing record keys: {missing}"
+        return rec, None
+
     def get(self, key: str) -> dict | None:
+        if self.root.is_dir():
+            self._load_index()      # memoized; heals a missing/corrupt index
         p = self.path(key)
         try:
-            rec = json.loads(p.read_text())
-        except (OSError, ValueError):
+            text = p.read_text()
+        except OSError:
             return None
-        if rec.get("schema") != SCHEMA_VERSION or rec.get("digest") != code_digest():
+        rec, why = self._validate(text)
+        if why is not None:
+            self.quarantine(p, why)
             return None
         return rec
 
+    def quarantine(self, path: pathlib.Path, reason: str) -> None:
+        """Move a corrupt record aside (it stays inspectable, stops
+        poisoning reads); the caller recomputes the point."""
+        qdir = self.root / "quarantine"
+        try:
+            qdir.mkdir(parents=True, exist_ok=True)
+            os.replace(path, qdir / path.name)
+        except OSError:
+            try:
+                path.unlink(missing_ok=True)
+            except OSError:
+                return          # unreadable AND unremovable: leave it to prune
+        self.quarantined += 1
+
     def put(self, key: str, record: dict, *, flush_index: bool = True) -> None:
         record = {"schema": SCHEMA_VERSION, "digest": code_digest(), **record}
+        record["checksum"] = _record_checksum(record)
         p = self.path(key)
         p.parent.mkdir(parents=True, exist_ok=True)
         _atomic_write(p, json.dumps(record, sort_keys=True))
         idx = self._load_index()
+        idx["entries"][key] = self._index_entry(record)
+        if flush_index:
+            self.flush_index()
+
+    @staticmethod
+    def _index_entry(record: dict) -> dict:
         entry = {"kind": record.get("kind", "sim"),
                  "trace": spec_label(record["trace"])}
         if "stats" in record:
             entry["cycles"] = record["stats"].get("cycles")
-        idx["entries"][key] = entry
-        if flush_index:
-            self.flush_index()
+        return entry
 
     def _load_index(self) -> dict:
         if self._index is None:
+            rebuilt = False
             try:
                 idx = json.loads((self.root / "index.json").read_text())
                 assert isinstance(idx.get("entries"), dict)
             except (OSError, ValueError, AssertionError):
-                idx = {"entries": {}}
+                # missing/corrupt index: rebuild the advisory summary from
+                # the shard files themselves (the store's source of truth)
+                idx = {"entries": self._scan_entries()}
+                rebuilt = True
             idx["schema"] = SCHEMA_VERSION
             idx["digest"] = code_digest()
             self._index = idx
+            if rebuilt and self.root.is_dir():
+                self.flush_index()      # self-heal on disk right away
         return self._index
+
+    def _scan_entries(self) -> dict:
+        entries: dict[str, dict] = {}
+        if not self.root.is_dir():
+            return entries
+        for p in sorted(self.root.glob("??/*.json")):
+            try:
+                rec, why = self._validate(p.read_text())
+            except OSError:
+                continue
+            if rec is not None:
+                entries[p.stem] = self._index_entry(rec)
+        return entries
+
+    def rebuild_index(self) -> int:
+        """Rewrite ``index.json`` from the shard files; returns live entries."""
+        self._index = {"schema": SCHEMA_VERSION, "digest": code_digest(),
+                       "entries": self._scan_entries()}
+        self.flush_index()
+        return len(self._index["entries"])
 
     def flush_index(self) -> None:
         if self._index is not None:
+            # drop entries whose shard files are gone (index must never
+            # disagree with the store in the dangerous direction)
+            self._index["entries"] = {
+                k: v for k, v in self._index["entries"].items()
+                if self.path(k).exists()}
             self.root.mkdir(parents=True, exist_ok=True)
             _atomic_write(self.root / "index.json",
                           json.dumps(self._index, sort_keys=True, indent=1))
 
     def prune_stale(self) -> int:
         """Delete entries written against a different source digest or schema
-        (including pre-engine legacy files).  Returns the number removed."""
+        (including pre-engine legacy files) plus stray ``.tmp`` droppings.
+        Unreadable/undeletable entries are skipped, never fatal.  Returns
+        the number removed."""
         removed = 0
-        current = code_digest()
         if not self.root.is_dir():
             return 0
         for p in self.root.glob("??/*.json"):
             try:
-                rec = json.loads(p.read_text())
-                stale = (rec.get("schema") != SCHEMA_VERSION
-                         or rec.get("digest") != current)
-            except (OSError, ValueError):
+                rec, why = self._validate(p.read_text())
+                stale = rec is None          # old digest/schema OR corrupt
+            except OSError:
                 stale = True
             if stale:
+                try:
+                    p.unlink(missing_ok=True)
+                    removed += 1
+                except OSError:
+                    continue                 # unreadable and stuck: skip
+        for p in self.root.glob("??/*.tmp"):
+            try:
                 p.unlink(missing_ok=True)
-                removed += 1
-        idx = self._load_index()
-        idx["entries"] = {k: v for k, v in idx["entries"].items()
-                          if self.path(k).exists()}
-        self.flush_index()
+            except OSError:
+                continue
+        self._load_index()
+        self.flush_index()                   # drops entries without files
         return removed
 
 
@@ -288,15 +397,39 @@ def _atomic_write(path: pathlib.Path, text: str) -> None:
 class SweepResult:
     point: "tuple"          # (label, SimConfig) as given
     key: str
-    stats: Stats
+    stats: Stats | None     # None only for quarantined points (error set)
     trace_meta: dict
     cached: bool            # True when served from the store
-    engine: str = "scalar"  # "batched" | "runahead" | "scalar"
+    engine: str = "scalar"  # "batched" | "runahead" | "scalar" | "failed"
     seconds: float = 0.0    # this point's share of its task's wall-clock
     cpu_seconds: float = 0.0  # this point's share of its task's CPU time
     diag: dict | None = None  # runahead-engine diagnostics (computed points
     #                           only; the first lane of a lockstep group
     #                           carries the group counters under "group")
+    error: str | None = None  # quarantine reason (stats is None)
+
+
+class SweepError(RuntimeError):
+    """Some points were quarantined and the caller didn't allow partial
+    results.  Carries the structured failure report and whatever results
+    (cached + computed + failed placeholders) were assembled."""
+
+    def __init__(self, failures: list[dict], results: list):
+        self.failures = failures
+        self.results = results
+        labels = ", ".join(f["label"] for f in failures[:3])
+        more = f" (+{len(failures) - 3} more)" if len(failures) > 3 else ""
+        super().__init__(
+            f"{len(failures)} sweep point(s) quarantined after retries and "
+            f"scalar fallback: {labels}{more}")
+
+
+#: the last sweep's SupervisorReport (None when everything was cached or no
+#: sweep ran yet); benchmark drivers read retry/quarantine counters from it
+LAST_REPORT: "supervisor_mod.SupervisorReport | None" = None
+
+#: sentinel: resolve the chaos plan from REPRO_CHAOS at call time
+_ENV_CHAOS = object()
 
 
 #: per-process trace memo (worker processes are reused across map chunks and
@@ -380,29 +513,41 @@ def _lane_key(cfg: SimConfig, force_scalar: bool = False):
             tuple((c.ways, c.line, c.way_bytes) for c in cfg.l1_configs()))
 
 
-def _run_batch(args: tuple[str, tuple[str, ...], bool]) \
+def _run_batch(payload: dict, attempt: int = 0) \
         -> tuple[list, dict, list, float, float, list]:
     """Worker entry: one trace x a batch of SimConfig lanes.
 
-    ``force_scalar`` travels inside the task (resolved once in the parent):
-    pool workers are forked lazily and cached, so re-reading the environment
-    here could disagree with the parent's routing decision.  The returned
-    wall-clock covers the whole task (trace build included) so the caller
-    can attribute sweep time to engines (``BENCH_sim.json``); the CPU time
-    alongside it separates engine compute from scheduler/SMT contention
-    (on a contended box task wall can be ~2x task CPU); the trailing
-    per-lane diagnostics carry the runahead engine's lockstep/microstep
-    counters.
+    ``payload`` is built in :func:`sweep`: ``spec`` (trace-spec blob),
+    ``cfgs`` (config blobs), ``scalar`` (route everything down the golden
+    scalar engine — resolved once in the parent: pool workers are forked
+    lazily and cached, so re-reading the environment here could disagree
+    with the parent's routing decision), plus the supervision envelope
+    (``key``/``site``/``chaos``/``ppid``) that lets a chaos plan fire
+    deterministic faults inside the task body — the supervisor passes the
+    ``attempt`` index so transient faults hit first attempts only.
+
+    The returned wall-clock covers the whole task (trace build included) so
+    the caller can attribute sweep time to engines (``BENCH_sim.json``);
+    the CPU time alongside it separates engine compute from scheduler/SMT
+    contention (on a contended box task wall can be ~2x task CPU); the
+    trailing per-lane diagnostics carry the runahead engine's
+    lockstep/microstep counters.
     """
     import time
 
-    spec_blob, cfg_blobs, force_scalar = args
+    blob = payload.get("chaos")
+    if blob:
+        fault = chaos_mod.ChaosPlan.from_json(blob).fire(
+            payload.get("site", "sweep.task"), payload["key"], attempt)
+        if fault is not None:
+            chaos_mod.apply_task_fault(
+                fault, in_worker=os.getpid() != payload.get("ppid"))
     t0 = time.perf_counter()
     c0 = time.process_time()
-    tr = _trace_for(spec_blob)
-    cfgs = [cfg_from_json(json.loads(b)) for b in cfg_blobs]
+    tr = _trace_for(payload["spec"])
+    cfgs = [cfg_from_json(json.loads(b)) for b in payload["cfgs"]]
     diags: list = [None] * len(cfgs)
-    if force_scalar:
+    if payload["scalar"]:
         stats = [simulate(tr, cfg) for cfg in cfgs]
         tags = ["scalar"] * len(cfgs)
     else:
@@ -483,9 +628,37 @@ def shutdown_pool() -> None:
         _executor_workers = 0
 
 
+def _rebuild_pool() -> ProcessPoolExecutor | None:
+    """Supervisor hook: replace the shared pool after a crash or hang kill.
+
+    The broken executor is discarded without waiting (its workers are dead
+    or killed); a fresh one is forked unless JAX has been imported since —
+    then the supervisor degrades the rest of the run to inline execution
+    (see :func:`_pool_for_sweep`).
+    """
+    global _executor, _executor_workers
+    if _executor is not None:
+        try:
+            _executor.shutdown(wait=False, cancel_futures=True)
+        except Exception:
+            pass
+        _executor = None
+        _executor_workers = 0
+    return _pool_for_sweep()
+
+
+def _env_deadline() -> float | None:
+    """Fixed per-task deadline from ``REPRO_SWEEP_DEADLINE`` (seconds), or
+    None for the supervisor's adaptive robust-median deadline."""
+    env = os.environ.get("REPRO_SWEEP_DEADLINE")
+    return float(env) if env else None
+
+
 def sweep(points, *, store: SimCache | None = None,
-          workers: int | None = None) -> list[SweepResult]:
-    """Run every (trace-spec, SimConfig) point, in parallel, through the store.
+          workers: int | None = None, chaos=_ENV_CHAOS,
+          allow_partial: bool = False, max_attempts: int | None = None,
+          deadline: float | None = None) -> list[SweepResult]:
+    """Run every (trace-spec, SimConfig) point, supervised, through the store.
 
     Results come back in input order.  Cached points are served from
     ``artifacts/simcache`` without building their traces; uncached points —
@@ -493,7 +666,22 @@ def sweep(points, *, store: SimCache | None = None,
     :func:`_lane_key`) and run across ``workers`` processes (auto-detected
     by default; 0 or 1 forces inline execution, also via
     ``REPRO_SWEEP_WORKERS``).
+
+    Execution is fault-tolerant (:class:`~repro.runtime.supervisor.
+    TaskSupervisor`): a worker crash rebuilds the pool and retries its
+    tasks, a task past its deadline (``REPRO_SWEEP_DEADLINE`` or the
+    adaptive robust-median bound) has its worker killed and is retried, a
+    lane batch that exhausts its retries degrades to per-point tasks on
+    the scalar golden engine, and a point that fails even there is
+    *quarantined*: with ``allow_partial=True`` the sweep completes and the
+    point's :class:`SweepResult` carries ``stats=None`` + ``error``;
+    otherwise :class:`SweepError` is raised with the structured failure
+    report.  The supervisor's counters land in :data:`LAST_REPORT` either
+    way.  ``chaos`` accepts a :class:`~repro.runtime.chaos.ChaosPlan`
+    (default: resolved from ``REPRO_CHAOS``; pass None to force off) whose
+    faults are injected deterministically into tasks and the store.
     """
+    global LAST_REPORT
     store = store if store is not None else SimCache()
     norm = []
     for spec, cfg in points:
@@ -512,7 +700,12 @@ def sweep(points, *, store: SimCache | None = None,
         else:
             todo.append(i)
 
+    LAST_REPORT = None
+    failures: list[dict] = []
     if todo:
+        plan = chaos_mod.from_env() if chaos is _ENV_CHAOS else chaos
+        chaos_blob = plan.to_json() if plan is not None else None
+        parent_pid = os.getpid()
         # group points into per-trace lane batches (runahead points group
         # per L1 shape too; only the forced scalar path is one-per-task)
         force_scalar = _force_scalar()   # resolved once, shipped per task
@@ -536,19 +729,56 @@ def sweep(points, *, store: SimCache | None = None,
             return (-trace_points[tkey[0]], tkey[0], not is_ra, -len(idxs))
 
         order = sorted(tasks.items(), key=_task_order)
-        args = [(tkey[0], tuple(json.dumps(cfg_to_json(norm[i][1]),
-                                           sort_keys=True) for i in idxs),
-                 force_scalar)
-                for tkey, idxs in order]
+
+        # one supervised task per lane batch; every batch task degrades, on
+        # retry exhaustion, to per-point tasks on the scalar golden engine
+        # (an engine bug costs throughput, never correctness/availability)
+        owners: dict[str, list[int]] = {}
+        sup_tasks: list[supervisor_mod.Task] = []
+        for tkey, idxs in order:
+            spec_blob = tkey[0]
+            label = spec_label(json.loads(spec_blob))
+            scalar_task = force_scalar or tkey[1] is None
+            key = f"{label}|{tkey[1]}|{idxs[0]}"
+            cfg_blobs = tuple(json.dumps(cfg_to_json(norm[i][1]),
+                                         sort_keys=True) for i in idxs)
+
+            def _payload(k, blobs, scalar):
+                return {"spec": spec_blob, "cfgs": blobs, "scalar": scalar,
+                        "key": k, "chaos": chaos_blob, "ppid": parent_pid,
+                        "site": ("sweep.task.scalar" if scalar
+                                 else "sweep.task.batch")}
+
+            fallback = None
+            if not scalar_task:
+                fb = []
+                for j, i in enumerate(idxs):
+                    fkey = f"{key}!p{j}"
+                    fb.append(supervisor_mod.Task(
+                        fkey, _run_batch, _payload(fkey, (cfg_blobs[j],),
+                                                   True)))
+                    owners[fkey] = [i]
+                fallback = tuple(fb)
+            owners[key] = idxs
+            sup_tasks.append(supervisor_mod.Task(
+                key, _run_batch, _payload(key, cfg_blobs, scalar_task),
+                fallback))
+
         n_workers = min(workers if workers is not None else _auto_workers(),
-                        len(args))
-        ex = _pool_for_sweep() if n_workers > 1 else None
-        if ex is not None:
-            outs = list(ex.map(_run_batch, args, chunksize=1))
-        else:
-            outs = [_run_batch(a) for a in args]
-        for (tkey, idxs), (stats_ds, meta, tags, secs, cpu,
-                           diags) in zip(order, outs):
+                        len(sup_tasks))
+        use_pool = n_workers > 1
+        sup = supervisor_mod.TaskSupervisor(
+            pool_factory=_pool_for_sweep if use_pool else None,
+            pool_rebuild=_rebuild_pool if use_pool else None,
+            max_attempts=(max_attempts if max_attempts is not None else
+                          int(os.environ.get("REPRO_SWEEP_RETRIES", "3"))),
+            deadline=deadline if deadline is not None else _env_deadline())
+        rep = sup.run(sup_tasks)
+        LAST_REPORT = rep
+
+        for tkey2, out in rep.results.items():
+            idxs = owners[tkey2]
+            stats_ds, meta, tags, secs, cpu, diags = out
             share = secs / max(1, len(idxs))
             cpu_share = cpu / max(1, len(idxs))
             for i, stats_d, tag, diag in zip(idxs, stats_ds, tags, diags):
@@ -557,12 +787,46 @@ def sweep(points, *, store: SimCache | None = None,
                                 "cfg": cfg_to_json(cfg), "stats": stats_d,
                                 "engine": tag, "trace_meta": meta},
                           flush_index=False)
+                if plan is not None:
+                    fault = plan.fire("simcache.put", key, 0)
+                    if fault is not None:
+                        chaos_mod.corrupt_record(store, key, fault)
                 results[i] = SweepResult((spec, cfg), key,
                                          Stats.from_dict(stats_d), meta,
                                          cached=False, engine=tag,
                                          seconds=share,
                                          cpu_seconds=cpu_share, diag=diag)
         store.flush_index()
+        if plan is not None:
+            fault = plan.fire("simcache.index", "index", 0)
+            if fault is not None:
+                chaos_mod.corrupt_record(store, "index", fault)
+
+        # quarantined points: structured report + placeholder results
+        lost = {fail.key: fail for fail in rep.failures}
+        for tkey2, fail in lost.items():
+            for i in owners.get(tkey2, []):
+                if i in results:
+                    continue
+                spec, cfg, spec_json, key = norm[i]
+                failures.append({"label": spec_label(spec_json), "key": key,
+                                 "task": fail.key, "error": fail.error,
+                                 "attempts": fail.attempts})
+                results[i] = SweepResult((spec, cfg), key, None, {},
+                                         cached=False, engine="failed",
+                                         error=fail.error)
+        for i in todo:                       # defensive: no task covered it
+            if i not in results:
+                spec, cfg, spec_json, key = norm[i]
+                failures.append({"label": spec_label(spec_json), "key": key,
+                                 "task": "?", "error": "task lost",
+                                 "attempts": 0})
+                results[i] = SweepResult((spec, cfg), key, None, {},
+                                         cached=False, engine="failed",
+                                         error="task lost")
+        if failures and not allow_partial:
+            raise SweepError(failures,
+                             [results[i] for i in range(len(norm))])
     return [results[i] for i in range(len(norm))]
 
 
@@ -613,15 +877,28 @@ def _main(argv=None) -> int:
                     "REPRO_SIMCACHE or artifacts/simcache)")
     ap.add_argument("--prune", action="store_true",
                     help="delete entries from older source digests/schemas")
+    ap.add_argument("--rebuild-index", action="store_true",
+                    help="rewrite index.json from the shard files")
     args = ap.parse_args(argv)
     store = SimCache(args.root)
     files = list(store.root.glob("??/*.json")) if store.root.is_dir() else []
-    live = sum(1 for p in files
-               if store.get(p.stem) is not None)
+    live = corrupt = 0
+    for p in files:         # read-only census: _validate, never quarantine
+        try:
+            rec, why = store._validate(p.read_text())
+        except OSError:
+            rec, why = None, "unreadable"
+        live += rec is not None
+        corrupt += why is not None
+    qdir = store.root / "quarantine"
+    quarantined = sum(1 for _ in qdir.iterdir()) if qdir.is_dir() else 0
     print(f"root={store.root} entries={len(files)} current_digest={code_digest()}"
-          f" live={live} stale={len(files) - live}")
+          f" live={live} stale={len(files) - live - corrupt}"
+          f" corrupt={corrupt} quarantined={quarantined}")
     if args.prune:
         print(f"pruned={store.prune_stale()}")
+    if args.rebuild_index:
+        print(f"index_entries={store.rebuild_index()}")
     return 0
 
 

@@ -12,9 +12,11 @@ import collections
 import dataclasses
 import statistics
 import time
-from typing import Any, Callable
+from typing import TYPE_CHECKING, Any, Callable
 
-from repro.checkpoint.checkpointer import Checkpointer
+if TYPE_CHECKING:     # Checkpointer pulls in JAX; this module must stay
+    # importable from JAX-free sweep workers (chaos/supervisor depend on it)
+    from repro.checkpoint.checkpointer import Checkpointer
 
 
 class SimulatedFailure(Exception):
@@ -48,6 +50,16 @@ class StragglerWatchdog:
                 self.on_straggler(step, seconds, med)
             return True
         return False
+
+    def deadline(self, floor: float = 0.0) -> float | None:
+        """Prospective hang threshold: the robust-median straggler bound
+        applied *before* a step/task completes (the supervisor kills work
+        past it).  None until ``min_samples`` durations are recorded —
+        no basis for a deadline yet."""
+        history = list(self._times)[-self.window:]
+        if len(history) < self.min_samples:
+            return None
+        return max(floor, self.threshold * statistics.median(history))
 
 
 @dataclasses.dataclass

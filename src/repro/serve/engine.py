@@ -22,6 +22,12 @@ Degradation paths are explicit: a full queue raises :class:`Backpressure`
 at submit; pool pressure preempts the youngest sequence (re-queued, later
 re-prefilled, token stream resumed exactly); per-request deadlines cancel
 via the same retirement path as normal completion.
+
+Fault drills plug into the shared chaos layer
+(:mod:`repro.runtime.chaos`): a plan — passed as ``chaos=`` or resolved
+from ``REPRO_CHAOS`` — can reject admissions (``serve.backpressure``,
+exercising client retry) and stretch recorded step times (``serve.step``,
+exercising the straggler watchdog) deterministically from its seed.
 """
 from __future__ import annotations
 
@@ -35,6 +41,7 @@ import jax.numpy as jnp
 from repro.launch.steps import build_serve_engine_steps
 from repro.models import api
 from repro.models.paged_lm import serve_geometry
+from repro.runtime import chaos as chaos_mod
 from repro.runtime.fault_tolerance import StragglerWatchdog
 
 from .metrics import EngineMetrics, RequestMetrics
@@ -61,6 +68,7 @@ class ServeEngine:
                  detokenize: Optional[Callable[[int], object]] = None,
                  capture_logits: bool = False, rules=None,
                  watchdog: Optional[StragglerWatchdog] = None,
+                 chaos: Optional[chaos_mod.ChaosPlan] = None,
                  clock: Callable[[], float] = time.monotonic):
         ok, why = api.serve_supported(cfg)
         if not ok:
@@ -91,6 +99,7 @@ class ServeEngine:
         self.cache = self.steps.init_cache()
         self.watchdog = watchdog if watchdog is not None else \
             StragglerWatchdog(window=32, threshold=3.0, min_samples=8)
+        self.chaos = chaos if chaos is not None else chaos_mod.from_env()
         self.metrics = EngineMetrics()
         self.finished: list[Request] = []
         self._next_rid = 0
@@ -116,6 +125,11 @@ class ServeEngine:
             metrics=RequestMetrics(submit_time=now),
         )
         self._next_rid += 1
+        if self.chaos is not None:
+            fault = self.chaos.fire("serve.backpressure", str(req.rid))
+            if fault is not None:
+                raise Backpressure(
+                    f"injected backpressure (chaos) for rid {req.rid}")
         if not req.prompt:
             req.state = RequestState.FAILED
             req.error = "empty prompt"
@@ -256,6 +270,10 @@ class ServeEngine:
         else:
             self._run_decode(now)
         dt = time.monotonic() - t0
+        if self.chaos is not None:
+            fault = self.chaos.fire("serve.step", str(self.metrics.steps))
+            if fault is not None and fault.kind == "delay":
+                dt += fault.seconds       # stretch the measured step time
         if self.watchdog.record(self.metrics.steps, dt):
             self.metrics.stragglers += 1
         self.metrics.preemptions = self.sched.n_preemptions

@@ -1,0 +1,117 @@
+"""Unit tests for the deterministic chaos-injection layer (runtime/chaos.py)."""
+import json
+import os
+
+import pytest
+
+from repro.core.cgra import sweep as sw
+from repro.runtime import chaos
+from repro.runtime.fault_tolerance import SimulatedFailure
+
+
+def test_fire_is_deterministic_in_seed():
+    plan = chaos.ChaosPlan(3, "t", (chaos.ChaosRule("site", "raise",
+                                                    rate=0.5),))
+    rolls = [plan.fire("site.x", f"k{i}") is not None for i in range(64)]
+    again = [plan.fire("site.x", f"k{i}") is not None for i in range(64)]
+    assert rolls == again                   # pure function of (seed, inputs)
+    assert any(rolls) and not all(rolls)    # rate 0.5 actually partitions
+    other = chaos.ChaosPlan(4, "t", plan.rules)
+    assert rolls != [other.fire("site.x", f"k{i}") is not None
+                     for i in range(64)]    # seed matters
+
+
+def test_fire_site_prefix_key_match_and_attempt_gate():
+    plan = chaos.ChaosPlan(0, "t", (
+        chaos.ChaosRule("sweep.task", "raise", match="gcn"),))
+    assert plan.fire("sweep.task.batch", "gcn_cora|x") is not None
+    assert plan.fire("sweep.task.scalar", "gcn_cora|x") is not None
+    assert plan.fire("serve.step", "gcn_cora|x") is None       # site miss
+    assert plan.fire("sweep.task.batch", "radix|x") is None    # key miss
+    # transient: first attempt only — retries recover
+    assert plan.fire("sweep.task.batch", "gcn_cora|x", attempt=1) is None
+    persistent = chaos.ChaosPlan(0, "t", (
+        chaos.ChaosRule("sweep.task", "raise", first_attempt_only=False),))
+    assert persistent.fire("sweep.task.batch", "k", attempt=5) is not None
+
+
+def test_first_matching_rule_wins_and_reports_its_index():
+    plan = chaos.ChaosPlan(0, "t", (
+        chaos.ChaosRule("a.b", "crash"),
+        chaos.ChaosRule("a", "hang", seconds=9.0)))
+    assert plan.fire("a.b.c", "k").kind == "crash"
+    f = plan.fire("a.z", "k")
+    assert f.kind == "hang" and f.seconds == 9.0 and f.rule == 1
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown chaos kind"):
+        chaos.ChaosRule("site", "explode")
+
+
+def test_plan_json_round_trip():
+    plan = chaos.from_spec("42:mixed")
+    back = chaos.ChaosPlan.from_json(plan.to_json())
+    assert back == plan
+    # round-tripped plans fire identically (what workers rely on)
+    keys = [f"k{i}" for i in range(32)]
+    assert [plan.fire("sweep.task.batch", k) for k in keys] == \
+        [back.fire("sweep.task.batch", k) for k in keys]
+
+
+def test_from_spec_and_env(monkeypatch):
+    plan = chaos.from_spec("7:workercrash")
+    assert plan.seed == 7 and plan.profile == "workercrash"
+    assert chaos.from_spec("taskhang").seed == 0     # bare profile
+    with pytest.raises(ValueError, match="unknown chaos profile"):
+        chaos.from_spec("1:nosuch")
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)
+    assert chaos.from_env() is None
+    monkeypatch.setenv("REPRO_CHAOS", "5:cachecorrupt")
+    assert chaos.from_env().profile == "cachecorrupt"
+
+
+def test_apply_task_fault_inline_degrades_to_simulated_failure():
+    for kind in ("crash", "hang", "raise"):
+        fault = chaos.Fault(kind, 0.01, "s", "k", 0)
+        with pytest.raises(SimulatedFailure):
+            chaos.apply_task_fault(fault, in_worker=False)
+    with pytest.raises(ValueError, match="not a task fault"):
+        chaos.apply_task_fault(chaos.Fault("torn_write", 0, "s", "k", 0),
+                               in_worker=False)
+
+
+def test_corrupt_record_torn_and_lost_writes(tmp_path):
+    store = sw.SimCache(root=tmp_path)
+    store.put("a" * 64, {"kind": "sim", "trace": {"kernel": "x"},
+                         "cfg": {}, "stats": {}, "trace_meta": {}})
+    path = store.path("a" * 64)
+    chaos.corrupt_record(store, "a" * 64, chaos.Fault("torn_write", 0,
+                                                      "s", "k", 0))
+    assert path.exists() and store.get("a" * 64) is None   # truncated -> miss
+    store.put("b" * 64, {"kind": "sim", "trace": {"kernel": "x"},
+                         "cfg": {}, "stats": {}, "trace_meta": {}})
+    chaos.corrupt_record(store, "b" * 64, chaos.Fault("lost_write", 0,
+                                                      "s", "k", 0))
+    assert not store.path("b" * 64).exists()               # record vanished
+    assert list(tmp_path.glob("*/*.orphan.tmp"))           # stray tmp left
+    chaos.corrupt_record(store, "b" * 64, chaos.Fault("drop_index", 0,
+                                                      "s", "k", 0))
+    assert not (tmp_path / "index.json").exists()
+
+
+def test_probe_task_fires_and_returns(tmp_path):
+    plan = chaos.ChaosPlan(0, "t", (chaos.ChaosRule("probe", "raise"),))
+    payload = {"key": "k", "site": "probe", "result": 42,
+               "chaos": plan.to_json(), "ppid": os.getpid()}
+    with pytest.raises(SimulatedFailure):
+        chaos.probe_task(payload, attempt=0)
+    assert chaos.probe_task(payload, attempt=1) == 42      # transient
+    assert chaos.probe_task({"key": "k", "result": 1}) == 1  # no plan
+
+
+def test_profiles_are_well_formed():
+    for name, rules in chaos.PROFILES.items():
+        plan = chaos.ChaosPlan(1, name, rules)
+        blob = json.loads(plan.to_json())
+        assert blob["profile"] == name and blob["rules"]

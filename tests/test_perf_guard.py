@@ -181,3 +181,84 @@ def test_serve_comparison_off_by_default(tmp_path, capsys):
                           "--fresh", str(tmp_path / "fresh.json")])
     assert rc == 0
     assert "serve" not in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# fault-counter surfacing (the supervisor's `faults` record section)
+# ---------------------------------------------------------------------------
+
+def _write_faults(path, quarantined=0, failures=(), pps=10.0):
+    rec = {"points_per_sec": pps, "points": 88, "sweep_seconds": 10.0,
+           "faults": {"retries": 2, "crashes": 1, "hangs": 0,
+                      "pool_rebuilds": 1, "fallback_tasks": 0,
+                      "quarantined": quarantined,
+                      "failures": list(failures)}}
+    path.write_text(json.dumps({"schema": 1, "runs": {"cold_quick": rec}}))
+
+
+def test_clean_fault_counters_pass_quietly(tmp_path, capsys):
+    _write_faults(tmp_path / "base.json")
+    _write_faults(tmp_path / "fresh.json")
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json"),
+                          "--strict"])
+    out = capsys.readouterr().out
+    assert rc == 0 and "::warning::" not in out
+    assert "faults]: retries=2 crashes=1" in out    # counters surfaced
+
+
+def test_quarantined_points_warn_and_trip_strict(tmp_path, capsys):
+    _write_faults(tmp_path / "base.json")
+    _write_faults(tmp_path / "fresh.json", quarantined=2, failures=[
+        {"label": "gcn_cora", "error": "hang"},
+        {"label": "rgb", "error": "crash"}])
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json")])
+    out = capsys.readouterr().out
+    assert rc == 0                                  # warn-only by default
+    assert "::warning::sweep quarantined 2 point(s) [gcn_cora, rgb]" in out
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json"),
+                          "--strict"])
+    assert rc == 1
+
+
+def test_missing_faults_section_skips_with_message(tmp_path, capsys):
+    _write(tmp_path / "base.json", 10.0)
+    _write(tmp_path / "fresh.json", 10.0)           # pre-supervisor record
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json"),
+                          "--strict"])
+    out = capsys.readouterr().out
+    assert rc == 0 and "no faults section" in out
+
+
+# ---------------------------------------------------------------------------
+# malformed-record hardening (warn-only message instead of a traceback)
+# ---------------------------------------------------------------------------
+
+def test_non_dict_document_skips_not_raises(tmp_path, capsys):
+    (tmp_path / "base.json").write_text("[1, 2, 3]")     # a list, not a doc
+    _write(tmp_path / "fresh.json", 10.0)
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 0
+    assert "not a benchmark record" in capsys.readouterr().out
+
+
+def test_zero_baseline_throughput_skips_not_divides(tmp_path, capsys):
+    _write(tmp_path / "base.json", 0.0)
+    _write(tmp_path / "fresh.json", 10.0)
+    rc = perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                          "--fresh", str(tmp_path / "fresh.json")])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "nothing to ratio against" in out
+
+
+def test_engine_split_absent_reports_skip(tmp_path, capsys):
+    _write(tmp_path / "base.json", 10.0)            # no engines section
+    _write(tmp_path / "fresh.json", 10.0)
+    perf_guard.main(["--baseline", str(tmp_path / "base.json"),
+                     "--fresh", str(tmp_path / "fresh.json")])
+    assert "no engine split to compare" in capsys.readouterr().out

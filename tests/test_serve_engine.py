@@ -248,3 +248,55 @@ def test_engine_under_host_mesh(setup):
     eng.assert_no_leaks()
     assert r.state is RequestState.FINISHED
     assert len(r.out_tokens) == 4
+
+
+# ---------------------------------------------------------------------------
+# chaos injection (shared fault layer, runtime/chaos.py)
+# ---------------------------------------------------------------------------
+
+def test_chaos_backpressure_rejects_deterministically(setup):
+    from repro.runtime import chaos
+    plan = chaos.ChaosPlan(3, "t", (chaos.ChaosRule(
+        "serve.backpressure", "backpressure", rate=0.5),))
+    rejected = [rid for rid in range(12)
+                if plan.fire("serve.backpressure", str(rid)) is not None]
+    assert rejected and len(rejected) < 12       # the plan partitions rids
+
+    eng = mk_engine(setup, chaos=plan)
+    got = []
+    for rid in range(12):
+        try:
+            eng.submit([1, 2, 3], max_new_tokens=1)
+        except Backpressure:
+            got.append(rid)
+    assert got == rejected                       # exactly the planned rids
+    eng.run()
+    eng.assert_no_leaks()
+    # accepted requests still complete normally
+    done = [r for r in eng.finished if r.state is RequestState.FINISHED]
+    assert len(done) == 12 - len(rejected)
+
+
+def test_chaos_step_delay_trips_straggler_watchdog(setup):
+    from repro.runtime import chaos
+    from repro.runtime.fault_tolerance import StragglerWatchdog
+    plan = chaos.ChaosPlan(5, "t", (chaos.ChaosRule(
+        "serve.step", "delay", rate=0.3, seconds=30.0),))
+    eng = mk_engine(setup, chaos=plan,
+                    watchdog=StragglerWatchdog(window=16, threshold=3.0,
+                                               min_samples=4))
+    run_requests(eng)
+    assert eng.metrics.stragglers > 0            # injected delays flagged
+
+    # same traffic, no chaos: a quiet run for comparison
+    eng2 = mk_engine(setup, chaos=chaos.ChaosPlan(5, "off", ()),
+                     watchdog=StragglerWatchdog(window=16, threshold=3.0,
+                                                min_samples=4))
+    rs = run_requests(eng2)
+    assert all(r.state is RequestState.FINISHED for r in rs)
+
+
+def test_chaos_off_by_default(setup, monkeypatch):
+    monkeypatch.delenv("REPRO_CHAOS", raising=False)
+    eng = mk_engine(setup)
+    assert eng.chaos is None

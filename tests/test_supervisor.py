@@ -1,0 +1,175 @@
+"""TaskSupervisor tests: retry, backoff, fallback, quarantine, pool
+rebuild on worker crash, and deadline kills of hung workers.
+
+Pool tests use small real fork ``ProcessPoolExecutor``s with
+:func:`repro.runtime.chaos.probe_task` as the (picklable) task body; the
+chaos plan decides deterministically which attempts crash or hang, so the
+tests replay exactly.
+"""
+import collections
+import multiprocessing
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+
+import pytest
+
+from repro.runtime import chaos, supervisor
+from repro.runtime.fault_tolerance import SimulatedFailure, StragglerWatchdog
+
+
+def _tasks(n, plan=None, site="probe", result=lambda i: i):
+    blob = plan.to_json() if plan is not None else None
+    return [supervisor.Task(f"k{i}", chaos.probe_task,
+                            {"key": f"k{i}", "site": site,
+                             "result": result(i), "chaos": blob,
+                             "ppid": os.getpid()})
+            for i in range(n)]
+
+
+def _mk_pool(n=2):
+    return ProcessPoolExecutor(max_workers=n,
+                               mp_context=multiprocessing.get_context("fork"))
+
+
+# ---------------------------------------------------------------------------
+# inline (no pool): retry / fallback / quarantine state machine
+# ---------------------------------------------------------------------------
+
+def test_inline_success_and_results_by_key():
+    sup = supervisor.TaskSupervisor(backoff_base=0.001)
+    rep = sup.run(_tasks(5))
+    assert rep.ok() and rep.results == {f"k{i}": i for i in range(5)}
+    assert rep.counters() == {"retries": 0, "crashes": 0, "hangs": 0,
+                              "pool_rebuilds": 0, "fallback_tasks": 0,
+                              "quarantined": 0}
+
+
+def test_inline_transient_failure_retries_and_recovers():
+    plan = chaos.ChaosPlan(0, "t", (chaos.ChaosRule("probe", "raise"),))
+    sup = supervisor.TaskSupervisor(backoff_base=0.001)
+    rep = sup.run(_tasks(4, plan))
+    assert rep.ok() and len(rep.results) == 4
+    assert rep.retries == 4                 # every first attempt failed
+
+
+def test_inline_persistent_failure_quarantines_with_error():
+    plan = chaos.ChaosPlan(0, "t", (chaos.ChaosRule(
+        "probe", "raise", first_attempt_only=False),))
+    sup = supervisor.TaskSupervisor(max_attempts=3, backoff_base=0.001)
+    rep = sup.run(_tasks(2, plan))
+    assert not rep.ok() and not rep.results
+    assert sorted(f.key for f in rep.failures) == ["k0", "k1"]
+    for f in rep.failures:
+        assert f.attempts == 3 and "SimulatedFailure" in f.error
+    assert rep.retries == 4                 # 2 tasks x 2 requeues each
+
+
+def test_fallback_runs_before_quarantine():
+    plan = chaos.ChaosPlan(0, "t", (chaos.ChaosRule(
+        "batch", "raise", first_attempt_only=False),))
+    tasks = _tasks(1, plan, site="batch")
+    tasks[0].fallback = tuple(
+        supervisor.Task(f"k0!p{j}", chaos.probe_task,
+                        {"key": f"k0!p{j}", "site": "scalar",
+                         "result": 10 + j, "chaos": plan.to_json()})
+        for j in range(3))
+    sup = supervisor.TaskSupervisor(max_attempts=2, backoff_base=0.001)
+    rep = sup.run(tasks)
+    assert rep.ok()                         # chaos only matches "batch"
+    assert rep.results == {"k0!p0": 10, "k0!p1": 11, "k0!p2": 12}
+    assert rep.fallback_tasks == 3 and "k0" not in rep.results
+
+
+def test_failing_fallback_is_quarantined_not_dropped():
+    plan = chaos.ChaosPlan(0, "t", (chaos.ChaosRule(
+        "", "raise", first_attempt_only=False),))   # matches every site
+    tasks = _tasks(1, plan, site="batch")
+    tasks[0].fallback = (supervisor.Task(
+        "k0!p0", chaos.probe_task,
+        {"key": "k0!p0", "site": "scalar", "chaos": plan.to_json()}),)
+    sup = supervisor.TaskSupervisor(max_attempts=2, backoff_base=0.001)
+    rep = sup.run(tasks)
+    assert [f.key for f in rep.failures] == ["k0!p0"]
+
+
+def test_backoff_delay_deterministic_and_bounded():
+    d1 = supervisor.backoff_delay("k", 1, base=0.1, cap=2.0)
+    assert d1 == supervisor.backoff_delay("k", 1, base=0.1, cap=2.0)
+    assert d1 != supervisor.backoff_delay("k", 2, base=0.1, cap=2.0)
+    for attempt in range(1, 12):
+        d = supervisor.backoff_delay("k", attempt, base=0.1, cap=2.0)
+        assert 0.05 <= d < 3.0              # jitter in [0.5x, 1.5x) of cap
+
+
+def test_inline_respects_backoff_gate():
+    sup = supervisor.TaskSupervisor(backoff_base=0.05, backoff_cap=0.05)
+    plan = chaos.ChaosPlan(0, "t", (chaos.ChaosRule("probe", "raise"),))
+    t0 = time.monotonic()
+    rep = sup.run(_tasks(1, plan))
+    assert rep.ok()
+    assert time.monotonic() - t0 >= 0.02    # waited out the retry delay
+
+
+# ---------------------------------------------------------------------------
+# real pool: crash -> BrokenProcessPool -> rebuild; hang -> deadline kill
+# ---------------------------------------------------------------------------
+
+def test_pool_crash_rebuilds_and_recovers():
+    plan = chaos.ChaosPlan(1, "t", (chaos.ChaosRule("probe", "crash",
+                                                    rate=0.5),))
+    fired = sum(plan.fire("probe", f"k{i}") is not None for i in range(6))
+    assert fired                                  # the plan does crash some
+    # generous attempt budget: a pool break charges innocent in-flight
+    # siblings too, so a task can burn attempts without ever failing itself
+    sup = supervisor.TaskSupervisor(pool_factory=_mk_pool, max_attempts=6,
+                                    backoff_base=0.001)
+    rep = sup.run(_tasks(6, plan))
+    assert rep.ok() and rep.results == {f"k{i}": i for i in range(6)}
+    assert rep.crashes >= 1 and rep.pool_rebuilds >= 1
+
+
+def test_pool_hang_killed_by_deadline_then_retried():
+    plan = chaos.ChaosPlan(2, "t", (chaos.ChaosRule(
+        "probe", "hang", rate=0.4, seconds=60.0),))
+    hung = sum(plan.fire("probe", f"k{i}") is not None for i in range(4))
+    assert hung                                   # the plan does hang some
+    sup = supervisor.TaskSupervisor(pool_factory=_mk_pool, deadline=1.0,
+                                    backoff_base=0.001)
+    t0 = time.monotonic()
+    rep = sup.run(_tasks(4, plan))
+    assert rep.ok() and len(rep.results) == 4
+    assert rep.hangs >= 1 and rep.pool_rebuilds >= 1
+    assert time.monotonic() - t0 < 30.0           # killed, not waited out
+
+
+def test_pool_rebuild_to_none_degrades_inline():
+    calls = collections.Counter()
+
+    def factory_once():
+        if calls["n"]:
+            return None                           # e.g. JAX imported since
+        calls["n"] += 1
+        return _mk_pool()
+
+    plan = chaos.ChaosPlan(1, "t", (chaos.ChaosRule("probe", "crash",
+                                                    rate=0.5),))
+    sup = supervisor.TaskSupervisor(pool_factory=factory_once,
+                                    pool_rebuild=factory_once,
+                                    backoff_base=0.001)
+    rep = sup.run(_tasks(6, plan))
+    assert rep.ok() and len(rep.results) == 6     # finished inline
+
+
+def test_adaptive_deadline_uses_watchdog_median():
+    wd = StragglerWatchdog(window=8, threshold=4.0, min_samples=3)
+    sup = supervisor.TaskSupervisor(watchdog=wd, min_deadline=0.5)
+    assert sup._deadline() is None                # no samples yet
+    for s in (0.1, 0.1, 0.1):
+        wd.record(0, s)
+    assert sup._deadline() == 0.5                 # floor dominates 4x median
+    for s in (1.0,) * 8:
+        wd.record(0, s)
+    assert sup._deadline() == pytest.approx(4.0)  # 4x median of window
+    fixed = supervisor.TaskSupervisor(deadline=2.5, watchdog=wd)
+    assert fixed._deadline() == 2.5

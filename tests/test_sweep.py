@@ -323,3 +323,150 @@ def test_reconfigure_cached_round_trip(tmp_path):
     # different window is a different point
     r3 = sw.reconfigure_cached(spec, presets.RECONFIG, window=1024, store=store)
     assert r3.h_curves is not None            # computed, not served from cache
+
+
+# ---------------------------------------------------------------------------
+# Hardened store: checksums, quarantine, index rebuild
+# ---------------------------------------------------------------------------
+
+def test_truncated_record_quarantined_and_recomputed(tmp_path):
+    """A torn write reads as a miss: the record is quarantined (not
+    deleted), the point recomputes to the same stats, and the store serves
+    hits again afterwards."""
+    store = sw.SimCache(tmp_path)
+    r1 = sw.sweep([POINT], store=store, workers=0)[0]
+    path = store.path(r1.key)
+    text = path.read_text()
+    path.write_text(text[:len(text) // 2])
+
+    store2 = sw.SimCache(tmp_path)
+    r2 = sw.sweep([POINT], store=store2, workers=0)[0]
+    assert not r2.cached and r2.stats == r1.stats
+    assert store2.quarantined == 1
+    assert len(list((tmp_path / "quarantine").iterdir())) == 1
+    assert sw.sweep([POINT], store=sw.SimCache(tmp_path),
+                    workers=0)[0].cached
+
+
+def test_bitrot_fails_checksum_and_misses(tmp_path):
+    store = sw.SimCache(tmp_path)
+    r1 = sw.sweep([POINT], store=store, workers=0)[0]
+    rec = json.loads(store.path(r1.key).read_text())
+    rec["stats"]["cycles"] += 1               # flipped bit, stale checksum
+    store.path(r1.key).write_text(json.dumps(rec, sort_keys=True))
+    store2 = sw.SimCache(tmp_path)
+    assert store2.get(r1.key) is None
+    assert store2.quarantined == 1
+
+
+def test_missing_required_key_is_corrupt_not_crash(tmp_path):
+    store = sw.SimCache(tmp_path)
+    r1 = sw.sweep([POINT], store=store, workers=0)[0]
+    rec = json.loads(store.path(r1.key).read_text())
+    del rec["stats"]
+    rec["checksum"] = sw._record_checksum(rec)  # checksum valid, body isn't
+    store.path(r1.key).write_text(json.dumps(rec, sort_keys=True))
+    store2 = sw.SimCache(tmp_path)
+    assert store2.get(r1.key) is None           # miss, not KeyError
+    assert store2.quarantined == 1
+
+
+def test_stale_records_miss_without_quarantine(tmp_path, monkeypatch):
+    """Old-digest records are prune's business — a plain miss, never moved
+    to quarantine (checked before the checksum so legacy records without a
+    checksum field aren't misclassified as corrupt)."""
+    store = sw.SimCache(tmp_path)
+    r1 = sw.sweep([POINT], store=store, workers=0)[0]
+    monkeypatch.setattr(sw, "_digest_memo", "f" * 16)
+    store2 = sw.SimCache(tmp_path)
+    assert store2.get(r1.key) is None
+    assert store2.quarantined == 0
+    assert store.path(r1.key).exists()
+
+
+def test_index_rebuilt_from_shards(tmp_path):
+    store = sw.SimCache(tmp_path)
+    r1 = sw.sweep([POINT], store=store, workers=0)[0]
+    (tmp_path / "index.json").unlink()
+    store2 = sw.SimCache(tmp_path)
+    assert store2.get(r1.key) is not None       # reads never need the index
+    assert store2.rebuild_index() == 1
+    idx = json.loads((tmp_path / "index.json").read_text())
+    assert r1.key in idx["entries"]
+    # a corrupt index file is replaced the same way
+    (tmp_path / "index.json").write_text("[1, 2")
+    r2 = sw.sweep([POINT], store=sw.SimCache(tmp_path), workers=0)[0]
+    assert r2.cached
+    idx = json.loads((tmp_path / "index.json").read_text())
+    assert r1.key in idx["entries"]
+
+
+def test_prune_skips_unreadable_entries(tmp_path):
+    store = sw.SimCache(tmp_path)
+    sw.sweep([POINT], store=store, workers=0)
+    blocker = tmp_path / "ee" / ("ee" + "2" * 62 + ".json")
+    blocker.mkdir(parents=True)                 # a directory, not a file
+    stray = tmp_path / "ee" / "leftover.tmp"
+    stray.write_text("{")
+    assert sw.SimCache(tmp_path).prune_stale() == 0   # live entry survives
+    assert blocker.is_dir()                     # skipped, not fatal
+    assert not stray.exists()                   # .tmp droppings swept
+
+
+# ---------------------------------------------------------------------------
+# Supervised execution: degradation and quarantine (ISSUE 8 acceptance)
+# ---------------------------------------------------------------------------
+
+def test_persistent_batch_failure_degrades_to_scalar_golden(tmp_path):
+    """A lane batch whose batched/runahead execution always raises falls
+    back to per-point scalar golden-engine tasks and still returns correct
+    Stats — an engine bug costs throughput, never correctness."""
+    from repro.runtime import chaos
+    plan = chaos.ChaosPlan(1, "enginebug", chaos.PROFILES["enginebug"])
+    pts = [(TRACES["radix_hist_4k"], presets.CACHE_SPM),
+           (TRACES["radix_hist_4k"], presets.RUNAHEAD)]
+    res = sw.sweep(pts, store=sw.SimCache(tmp_path), workers=0, chaos=plan)
+    assert [r.engine for r in res] == ["scalar", "scalar"]
+    assert _observed(res[0].stats) == GOLDEN[("radix_hist_4k", "cache_spm")]
+    assert _observed(res[1].stats) == GOLDEN[("radix_hist_4k", "runahead")]
+    rep = sw.LAST_REPORT
+    assert rep.fallback_tasks == 2 and rep.ok()
+
+
+def test_point_failing_even_scalar_is_quarantined_and_reported(tmp_path):
+    from repro.runtime import chaos
+    plan = chaos.ChaosPlan(1, "doomed", (chaos.ChaosRule(
+        "sweep.task", "raise", rate=1.0, first_attempt_only=False,
+        match="radix_hist"),))
+    pts = [(TRACES["radix_hist_4k"], presets.CACHE_SPM),
+           (TRACES["rgb_2k"], presets.CACHE_SPM)]
+    with pytest.raises(sw.SweepError, match="quarantined") as ei:
+        sw.sweep(pts, store=sw.SimCache(tmp_path), workers=0, chaos=plan)
+    assert [f["label"] for f in ei.value.failures] == ["radix_hist_4k"] or \
+        len(ei.value.failures) == 1
+
+    res = sw.sweep(pts, store=sw.SimCache(tmp_path), workers=0, chaos=plan,
+                   allow_partial=True)
+    assert res[0].engine == "failed" and res[0].stats is None
+    assert "SimulatedFailure" in res[0].error
+    assert _observed(res[1].stats) == GOLDEN[("rgb_2k", "cache_spm")]
+    assert sw.LAST_REPORT.counters()["quarantined"] == 1
+
+
+def test_transient_chaos_recovers_bit_identical(tmp_path):
+    from repro.runtime import chaos
+    base = sw.sweep([POINT], store=sw.SimCache(tmp_path / "a"),
+                    workers=0, chaos=None)[0]
+    plan = chaos.ChaosPlan(9, "mixed", chaos.PROFILES["mixed"])
+    store = sw.SimCache(tmp_path / "b")
+    res = sw.sweep([POINT], store=store, workers=0, chaos=plan)[0]
+    assert res.stats == base.stats            # full-Stats equality
+    assert sw.LAST_REPORT.ok()
+
+
+def test_chaos_env_spec_reaches_sweep(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_CHAOS", "1:enginebug")
+    res = sw.sweep([(TRACES["radix_hist_4k"], presets.CACHE_SPM)],
+                   store=sw.SimCache(tmp_path), workers=0)
+    assert res[0].engine == "scalar"          # degraded via env-driven plan
+    assert _observed(res[0].stats) == GOLDEN[("radix_hist_4k", "cache_spm")]
