@@ -60,7 +60,13 @@ SWEEP_REPORT = {"seconds": 0.0, "points": 0, "cached": 0,
                 # scheduled, worker-pool breaks, deadline kills, pool
                 # rebuilds, degraded scalar fallback tasks, points given up on
                 "retries": 0, "crashes": 0, "hangs": 0, "pool_rebuilds": 0,
-                "fallback_tasks": 0, "quarantined": 0}
+                "fallback_tasks": 0, "quarantined": 0,
+                # elastic-service counters (core/cgra/sweep.LAST_ELASTIC):
+                # points recovered from an interrupted run's write-ahead
+                # journal, torn journal entries dropped on replay, points a
+                # cooperating peer computed, and lease-protocol activity
+                "resumed": 0, "journal_torn": 0, "peer_served": 0,
+                "lease_claimed": 0, "lease_steals": 0, "lease_lost": 0}
 
 #: structured report of quarantined sweep points (label, key, attempts,
 #: final error) — lands in ``BENCH_sim.json`` under ``faults.failures``
@@ -114,6 +120,13 @@ def warm(points) -> None:
     if sweep_engine.LAST_REPORT is not None:
         for k, v in sweep_engine.LAST_REPORT.counters().items():
             SWEEP_REPORT[k] += v
+    elastic = sweep_engine.LAST_ELASTIC
+    if elastic:
+        for k in ("resumed", "journal_torn", "peer_served"):
+            SWEEP_REPORT[k] += elastic.get(k, 0)
+        lease = elastic.get("lease") or {}
+        for k in ("claimed", "steals", "lost"):
+            SWEEP_REPORT["lease_" + k] += lease.get(k, 0)
 
 
 def sim(name: str, cfg: SimConfig) -> Stats:

@@ -95,6 +95,18 @@ def write_bench_sim(total_seconds: float, frontier: dict | None = None) -> dict:
             "pool_rebuilds": rep["pool_rebuilds"],
             "fallback_tasks": rep["fallback_tasks"],
             "quarantined": rep["quarantined"],
+            # crash-resume accounting: points recovered from a prior
+            # interrupted run's journal, torn entries dropped on replay,
+            # and points served by a cooperating elastic-service peer
+            "resume": {"resumed": rep["resumed"],
+                       "journal_torn": rep["journal_torn"],
+                       "peer_served": rep["peer_served"]},
+            # lease-protocol activity (zero unless REPRO_SWEEP_LEASES /
+            # the elastic service is in play); steals bound the duplicate
+            # simulation a multi-worker run may have performed
+            "leases": {"claimed": rep["lease_claimed"],
+                       "steals": rep["lease_steals"],
+                       "lost": rep["lease_lost"]},
             "failures": common.SWEEP_FAILURES[:20],
         },
     }

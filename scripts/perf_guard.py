@@ -131,6 +131,13 @@ def check_faults(fresh_path: pathlib.Path, run: str) -> bool:
     counters = {k: faults.get(k, 0) for k in
                 ("retries", "crashes", "hangs", "pool_rebuilds",
                  "fallback_tasks", "quarantined")}
+    # elastic-service counters (absent in pre-service records -> 0)
+    resume = faults.get("resume") or {}
+    lease = faults.get("leases") or {}
+    counters["resumed"] = resume.get("resumed", 0)
+    counters["journal_torn"] = resume.get("journal_torn", 0)
+    counters["peer_served"] = resume.get("peer_served", 0)
+    counters["lease_steals"] = lease.get("steals", 0)
     line = f"perf_guard[{run}/faults]: " + " ".join(
         f"{k}={v}" for k, v in counters.items())
     failures = faults.get("failures") or []

@@ -26,6 +26,18 @@ This module turns that into a first-class operation:
   batch first within a trace) so the handful of traces in flight at any
   moment stays within the worker memo and no worker rebuilds a trace it
   just evicted.
+* **Completion is crash-safe and elastic.**  Every computed point becomes
+  durable the moment its task finishes — simcache record first, then a
+  write-ahead journal entry (:mod:`.journal`, one atomic-rename append per
+  point) — so a ``kill -9``'d sweep re-invoked over the same grid resumes
+  from journal + simcache and produces bit-identical results, reporting
+  how many points it resumed.  With leases enabled
+  (``REPRO_SWEEP_LEASES=1`` or ``leases=...``), N independent ``sweep()``
+  processes sharing one store root cooperatively drain one grid: every
+  point is claimed through a digest-keyed TTL-heartbeat lease file
+  (:mod:`repro.runtime.leases`), unclaimed points are polled for peer
+  results, and expired leases are reclaimed (work stealing) — the only
+  source of duplicate simulation, and it is counted.
 
 Trace specs are picklable descriptions, never `Trace` objects:
 
@@ -53,13 +65,17 @@ import json
 import multiprocessing
 import os
 import pathlib
+import shutil
 import sys
 import tempfile
+import time
 from concurrent.futures import ProcessPoolExecutor
 
 from repro.runtime import chaos as chaos_mod
+from repro.runtime import leases as leases_mod
 from repro.runtime import supervisor as supervisor_mod
 
+from . import journal as journal_mod
 from . import trace as trace_mod
 from . import workloads as workloads_mod
 from .cache import CacheConfig
@@ -335,24 +351,49 @@ class SimCache:
         return len(self._index["entries"])
 
     def flush_index(self) -> None:
-        if self._index is not None:
-            # drop entries whose shard files are gone (index must never
-            # disagree with the store in the dangerous direction)
+        """Write the advisory index — safely under concurrent writers.
+
+        Two processes flushing the same store used to race read-modify-
+        write on ``index.json`` and silently drop each other's entries.
+        The flush now (a) serializes against peers through a short-lived
+        ``index.lock`` (O_EXCL; a crashed holder's stale lock is broken),
+        and (b) **merges on flush**: the on-disk entries are re-read and
+        unioned with this instance's view (ours win on conflict), so a
+        peer's entries survive even when the lock degrades to best-effort.
+        Entries whose shard files are gone are dropped either way (the
+        index must never disagree with the store in the dangerous
+        direction).
+        """
+        if self._index is None:
+            return
+        self.root.mkdir(parents=True, exist_ok=True)
+        with _IndexLock(self.root):
+            try:
+                disk = json.loads((self.root / "index.json").read_text())
+                disk_entries = disk.get("entries") \
+                    if isinstance(disk, dict) else None
+            except (OSError, ValueError):
+                disk_entries = None
+            entries = dict(self._index["entries"])
+            if isinstance(disk_entries, dict):
+                for k, v in disk_entries.items():
+                    entries.setdefault(k, v)
             self._index["entries"] = {
-                k: v for k, v in self._index["entries"].items()
-                if self.path(k).exists()}
-            self.root.mkdir(parents=True, exist_ok=True)
+                k: v for k, v in entries.items() if self.path(k).exists()}
             _atomic_write(self.root / "index.json",
                           json.dumps(self._index, sort_keys=True, indent=1))
 
     def prune_stale(self) -> int:
         """Delete entries written against a different source digest or schema
-        (including pre-engine legacy files) plus stray ``.tmp`` droppings.
-        Unreadable/undeletable entries are skipped, never fatal.  Returns
-        the number removed."""
+        (including pre-engine legacy files) plus stray ``.tmp`` droppings,
+        every grid journal, and leftover lease files (stale resume/claim
+        state goes with the results it described).  Unreadable/undeletable
+        entries are skipped, never fatal.  Returns the number removed."""
         removed = 0
         if not self.root.is_dir():
             return 0
+        journal_mod.SweepJournal.prune_all(self.root)
+        shutil.rmtree(self.root / "leases", ignore_errors=True)
         for p in self.root.glob("??/*.json"):
             try:
                 rec, why = self._validate(p.read_text())
@@ -387,6 +428,57 @@ def _atomic_write(path: pathlib.Path, text: str) -> None:
         except OSError:
             pass
         raise
+
+
+class _IndexLock:
+    """Advisory cross-process lock for the index read-merge-write.
+
+    O_EXCL-created ``index.lock``; a lock older than ``stale`` seconds
+    (its holder was killed) is broken.  If the lock cannot be won within
+    ``timeout`` the flush proceeds unlocked — the merge-on-flush union
+    still bounds the damage to losing a concurrent *same-instant* write,
+    and the index is advisory (reads never trust it)."""
+
+    def __init__(self, root: pathlib.Path, *, stale: float = 5.0,
+                 timeout: float = 2.0):
+        self.path = root / "index.lock"
+        self.stale = stale
+        self.timeout = timeout
+        self._fd: int | None = None
+
+    def __enter__(self):
+        deadline = time.monotonic() + self.timeout
+        while True:
+            try:
+                self._fd = os.open(self.path,
+                                   os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+                return self
+            except FileExistsError:
+                try:
+                    age = time.time() - self.path.stat().st_mtime
+                except OSError:
+                    age = 0.0
+                if age > self.stale:
+                    try:
+                        self.path.unlink(missing_ok=True)
+                    except OSError:
+                        pass
+                    continue
+                if time.monotonic() > deadline:
+                    return self          # degrade: merge without the lock
+                time.sleep(0.005)
+            except OSError:
+                return self              # unwritable root: best effort
+
+    def __exit__(self, *exc):
+        if self._fd is not None:
+            try:
+                os.close(self._fd)
+                self.path.unlink(missing_ok=True)
+            except OSError:
+                pass
+            self._fd = None
+        return False
 
 
 # ---------------------------------------------------------------------------
@@ -428,8 +520,36 @@ class SweepError(RuntimeError):
 #: sweep ran yet); benchmark drivers read retry/quarantine counters from it
 LAST_REPORT: "supervisor_mod.SupervisorReport | None" = None
 
+#: the last sweep's elastic-service accounting: ``resumed`` (points served
+#: from an interrupted run's journal + simcache), ``journal_torn`` (invalid
+#: journal entries dropped on replay), ``peer_served`` (points another
+#: worker computed while we waited on its lease), and ``lease`` (the
+#: LeaseStats dict, or None when leases were off) — flows into the
+#: ``faults`` section of ``BENCH_sim.json``
+LAST_ELASTIC: dict = {}
+
 #: sentinel: resolve the chaos plan from REPRO_CHAOS at call time
 _ENV_CHAOS = object()
+
+
+def _resolve_leases(leases, store: SimCache):
+    """``leases`` argument -> LeaseManager | None (env-driven by default).
+
+    ``None`` consults ``REPRO_SWEEP_LEASES`` (any non-empty value but "0"
+    enables lease claiming over the store root, with
+    ``REPRO_SWEEP_LEASE_TTL`` seconds TTL); ``True``/``False`` force it;
+    a :class:`~repro.runtime.leases.LeaseManager` is used as-is.
+    """
+    if isinstance(leases, leases_mod.LeaseManager):
+        return leases
+    if leases is None:
+        env = os.environ.get("REPRO_SWEEP_LEASES", "")
+        leases = bool(env) and env != "0"
+    if not leases:
+        return None
+    ttl = float(os.environ.get("REPRO_SWEEP_LEASE_TTL",
+                               leases_mod.DEFAULT_TTL))
+    return leases_mod.LeaseManager(store.root, ttl=ttl)
 
 
 #: per-process trace memo (worker processes are reused across map chunks and
@@ -657,7 +777,9 @@ def _env_deadline() -> float | None:
 def sweep(points, *, store: SimCache | None = None,
           workers: int | None = None, chaos=_ENV_CHAOS,
           allow_partial: bool = False, max_attempts: int | None = None,
-          deadline: float | None = None) -> list[SweepResult]:
+          deadline: float | None = None, leases=None,
+          lease_poll: float = 0.25, lease_wait: float = 600.0,
+          on_point=None) -> list[SweepResult]:
     """Run every (trace-spec, SimConfig) point, supervised, through the store.
 
     Results come back in input order.  Cached points are served from
@@ -680,92 +802,73 @@ def sweep(points, *, store: SimCache | None = None,
     way.  ``chaos`` accepts a :class:`~repro.runtime.chaos.ChaosPlan`
     (default: resolved from ``REPRO_CHAOS``; pass None to force off) whose
     faults are injected deterministically into tasks and the store.
+
+    Execution is also **crash-safe and elastic**:
+
+    * every computed point becomes durable as its task completes — store
+      record, then write-ahead journal entry — so killing this process at
+      any moment loses at most the in-flight tasks; re-invoking the same
+      grid resumes from journal + simcache (:data:`LAST_ELASTIC`
+      ``resumed`` reports how many points were recovered that way);
+    * with ``leases`` enabled (a :class:`~repro.runtime.leases.
+      LeaseManager`, ``True``, or ``REPRO_SWEEP_LEASES=1``), every point
+      is claimed through a digest-keyed TTL lease before it is computed.
+      Points a live peer holds are *deferred*: this process polls the
+      store every ``lease_poll`` seconds for the peer's durable result,
+      reclaims the lease once it expires (work stealing — the supervisor
+      then rebalances the reclaimed points into fresh lane batches), and
+      after ``lease_wait`` seconds without progress falls back to
+      computing leaselessly (duplicates are idempotent to store).  The
+      lease TTL is retuned each round from the supervisor watchdog's
+      robust-median deadline.  ``on_point(key)`` fires after each point
+      of this process becomes durable (the elastic service's lifecycle
+      hook).
     """
-    global LAST_REPORT
+    global LAST_REPORT, LAST_ELASTIC
     store = store if store is not None else SimCache()
     norm = []
     for spec, cfg in points:
         spec_json = normalize_spec(spec)
         norm.append((spec, cfg, spec_json, point_key(spec_json, cfg)))
 
+    plan = chaos_mod.from_env() if chaos is _ENV_CHAOS else chaos
+
+    # write-ahead journal for THIS grid: an interrupted run of the same
+    # grid left validated completion entries behind, and a point that is
+    # both journaled and durable in the store is a *resumed* point — a
+    # crash-recovery, distinguishable from an ordinary warm-cache hit
+    jrnl = journal_mod.SweepJournal(
+        store.root, journal_mod.grid_key(k for *_, k in norm))
+    journal_keys = jrnl.replay()
+
     results: dict[int, SweepResult] = {}
     todo: list[int] = []
-    for i, (spec, cfg, spec_json, key) in enumerate(norm):
-        rec = store.get(key)
+    resumed = 0
+    for i, (spec, cfg, spec_json, pkey) in enumerate(norm):
+        rec = store.get(pkey)
         if rec is not None:
-            results[i] = SweepResult((spec, cfg), key,
+            results[i] = SweepResult((spec, cfg), pkey,
                                      Stats.from_dict(rec["stats"]),
                                      rec["trace_meta"], cached=True,
                                      engine=rec.get("engine", "scalar"))
+            resumed += pkey in journal_keys
         else:
             todo.append(i)
 
     LAST_REPORT = None
+    LAST_ELASTIC = {"resumed": resumed, "journal_torn": jrnl.torn,
+                    "peer_served": 0, "lease": None}
     failures: list[dict] = []
+    lm = _resolve_leases(leases, store)
+    if lm is not None and lm.chaos is None:
+        lm.chaos = plan
+
     if todo:
-        plan = chaos_mod.from_env() if chaos is _ENV_CHAOS else chaos
         chaos_blob = plan.to_json() if plan is not None else None
         parent_pid = os.getpid()
-        # group points into per-trace lane batches (runahead points group
-        # per L1 shape too; only the forced scalar path is one-per-task)
         force_scalar = _force_scalar()   # resolved once, shipped per task
-        tasks: dict[tuple, list[int]] = {}
-        trace_points: dict[str, int] = {}
-        for i in todo:
-            spec_blob = json.dumps(norm[i][2], sort_keys=True)
-            lane = _lane_key(norm[i][1], force_scalar)
-            tkey = (spec_blob, lane) if lane is not None \
-                else (spec_blob, None, i)
-            tasks.setdefault(tkey, []).append(i)
-            trace_points[spec_blob] = trace_points.get(spec_blob, 0) + 1
-        # trace-major, heaviest first: all tasks of the heaviest trace come
-        # first (runahead batches before demand batches, larger batches
-        # first), so the worker trace memos see a few traces at a time and
-        # the big traces are not left as stragglers
-        def _task_order(kv):
-            tkey, idxs = kv
-            lane = tkey[1]
-            is_ra = lane is not None and lane[0] == "ra"
-            return (-trace_points[tkey[0]], tkey[0], not is_ra, -len(idxs))
-
-        order = sorted(tasks.items(), key=_task_order)
-
-        # one supervised task per lane batch; every batch task degrades, on
-        # retry exhaustion, to per-point tasks on the scalar golden engine
-        # (an engine bug costs throughput, never correctness/availability)
-        owners: dict[str, list[int]] = {}
-        sup_tasks: list[supervisor_mod.Task] = []
-        for tkey, idxs in order:
-            spec_blob = tkey[0]
-            label = spec_label(json.loads(spec_blob))
-            scalar_task = force_scalar or tkey[1] is None
-            key = f"{label}|{tkey[1]}|{idxs[0]}"
-            cfg_blobs = tuple(json.dumps(cfg_to_json(norm[i][1]),
-                                         sort_keys=True) for i in idxs)
-
-            def _payload(k, blobs, scalar):
-                return {"spec": spec_blob, "cfgs": blobs, "scalar": scalar,
-                        "key": k, "chaos": chaos_blob, "ppid": parent_pid,
-                        "site": ("sweep.task.scalar" if scalar
-                                 else "sweep.task.batch")}
-
-            fallback = None
-            if not scalar_task:
-                fb = []
-                for j, i in enumerate(idxs):
-                    fkey = f"{key}!p{j}"
-                    fb.append(supervisor_mod.Task(
-                        fkey, _run_batch, _payload(fkey, (cfg_blobs[j],),
-                                                   True)))
-                    owners[fkey] = [i]
-                fallback = tuple(fb)
-            owners[key] = idxs
-            sup_tasks.append(supervisor_mod.Task(
-                key, _run_batch, _payload(key, cfg_blobs, scalar_task),
-                fallback))
-
         n_workers = min(workers if workers is not None else _auto_workers(),
-                        len(sup_tasks))
+                        len(todo))
         use_pool = n_workers > 1
         sup = supervisor_mod.TaskSupervisor(
             pool_factory=_pool_for_sweep if use_pool else None,
@@ -773,60 +876,209 @@ def sweep(points, *, store: SimCache | None = None,
             max_attempts=(max_attempts if max_attempts is not None else
                           int(os.environ.get("REPRO_SWEEP_RETRIES", "3"))),
             deadline=deadline if deadline is not None else _env_deadline())
-        rep = sup.run(sup_tasks)
-        LAST_REPORT = rep
+        agg = supervisor_mod.SupervisorReport()
 
-        for tkey2, out in rep.results.items():
-            idxs = owners[tkey2]
-            stats_ds, meta, tags, secs, cpu, diags = out
-            share = secs / max(1, len(idxs))
-            cpu_share = cpu / max(1, len(idxs))
-            for i, stats_d, tag, diag in zip(idxs, stats_ds, tags, diags):
-                spec, cfg, spec_json, key = norm[i]
-                store.put(key, {"kind": "sim", "trace": spec_json,
-                                "cfg": cfg_to_json(cfg), "stats": stats_d,
-                                "engine": tag, "trace_meta": meta},
-                          flush_index=False)
-                if plan is not None:
-                    fault = plan.fire("simcache.put", key, 0)
-                    if fault is not None:
-                        chaos_mod.corrupt_record(store, key, fault)
-                results[i] = SweepResult((spec, cfg), key,
-                                         Stats.from_dict(stats_d), meta,
-                                         cached=False, engine=tag,
-                                         seconds=share,
-                                         cpu_seconds=cpu_share, diag=diag)
+        def _build_tasks(idx_list):
+            """Group points into per-trace lane batches (runahead points
+            group per L1 shape too; only the forced scalar path is
+            one-per-task), trace-major heaviest first, each batch task
+            degrading on retry exhaustion to per-point tasks on the
+            scalar golden engine."""
+            tasks: dict[tuple, list[int]] = {}
+            trace_points: dict[str, int] = {}
+            for i in idx_list:
+                spec_blob = json.dumps(norm[i][2], sort_keys=True)
+                lane = _lane_key(norm[i][1], force_scalar)
+                tkey = (spec_blob, lane) if lane is not None \
+                    else (spec_blob, None, i)
+                tasks.setdefault(tkey, []).append(i)
+                trace_points[spec_blob] = trace_points.get(spec_blob, 0) + 1
+
+            def _task_order(kv):
+                tkey, idxs = kv
+                lane = tkey[1]
+                is_ra = lane is not None and lane[0] == "ra"
+                return (-trace_points[tkey[0]], tkey[0], not is_ra,
+                        -len(idxs))
+
+            owners: dict[str, list[int]] = {}
+            sup_tasks: list[supervisor_mod.Task] = []
+            for tkey, idxs in sorted(tasks.items(), key=_task_order):
+                spec_blob = tkey[0]
+                label = spec_label(json.loads(spec_blob))
+                scalar_task = force_scalar or tkey[1] is None
+                task_key = f"{label}|{tkey[1]}|{idxs[0]}"
+                cfg_blobs = tuple(json.dumps(cfg_to_json(norm[i][1]),
+                                             sort_keys=True) for i in idxs)
+
+                def _payload(k, blobs, scalar):
+                    return {"spec": spec_blob, "cfgs": blobs,
+                            "scalar": scalar, "key": k, "chaos": chaos_blob,
+                            "ppid": parent_pid,
+                            "site": ("sweep.task.scalar" if scalar
+                                     else "sweep.task.batch")}
+
+                fallback = None
+                if not scalar_task:
+                    fb = []
+                    for j, i in enumerate(idxs):
+                        fkey = f"{task_key}!p{j}"
+                        fb.append(supervisor_mod.Task(
+                            fkey, _run_batch,
+                            _payload(fkey, (cfg_blobs[j],), True)))
+                        owners[fkey] = [i]
+                    fallback = tuple(fb)
+                owners[task_key] = idxs
+                sup_tasks.append(supervisor_mod.Task(
+                    task_key, _run_batch,
+                    _payload(task_key, cfg_blobs, scalar_task), fallback))
+            return sup_tasks, owners
+
+        def _persist_for(owners):
+            """The supervisor's on_result hook: make every point of a
+            completed task durable *now* (record, then journal entry —
+            the commit mark), release its lease, and notify the service
+            hook.  A kill at any moment between points loses only the
+            points not yet journaled."""
+            def _persist(task, out):
+                stats_ds, meta, tags = out[0], out[1], out[2]
+                for i, stats_d, tag in zip(owners[task.key], stats_ds,
+                                           tags):
+                    spec, cfg, spec_json, pkey = norm[i]
+                    store.put(pkey, {"kind": "sim", "trace": spec_json,
+                                     "cfg": cfg_to_json(cfg),
+                                     "stats": stats_d, "engine": tag,
+                                     "trace_meta": meta},
+                              flush_index=False)
+                    if plan is not None:
+                        fault = plan.fire("simcache.put", pkey, 0)
+                        if fault is not None:
+                            chaos_mod.corrupt_record(store, pkey, fault)
+                    jrnl.append(pkey, {"engine": tag})
+                    if plan is not None:
+                        fault = plan.fire("journal.append", pkey, 0)
+                        if fault is not None:
+                            chaos_mod.corrupt_record(jrnl, pkey, fault)
+                    if lm is not None:
+                        lm.release(pkey)
+                    if on_point is not None:
+                        on_point(pkey)
+                store.flush_index()     # merge-on-flush: peer-safe
+            return _persist
+
+        def _run_round(idx_list):
+            sup_tasks, owners = _build_tasks(idx_list)
+            rep = sup.run(sup_tasks, on_result=_persist_for(owners))
+            agg.retries += rep.retries
+            agg.crashes += rep.crashes
+            agg.hangs += rep.hangs
+            agg.pool_rebuilds += rep.pool_rebuilds
+            agg.fallback_tasks += rep.fallback_tasks
+            agg.results.update(rep.results)
+            agg.failures.extend(rep.failures)
+            for tkey2, out in rep.results.items():
+                idxs = owners[tkey2]
+                stats_ds, meta, tags, secs, cpu, diags = out
+                share = secs / max(1, len(idxs))
+                cpu_share = cpu / max(1, len(idxs))
+                for i, stats_d, tag, diag in zip(idxs, stats_ds, tags,
+                                                 diags):
+                    spec, cfg, spec_json, pkey = norm[i]
+                    results[i] = SweepResult((spec, cfg), pkey,
+                                             Stats.from_dict(stats_d), meta,
+                                             cached=False, engine=tag,
+                                             seconds=share,
+                                             cpu_seconds=cpu_share,
+                                             diag=diag)
+            # quarantined points: structured report + placeholder results
+            for fail in rep.failures:
+                for i in owners.get(fail.key, []):
+                    if i in results:
+                        continue
+                    spec, cfg, spec_json, pkey = norm[i]
+                    failures.append({"label": spec_label(spec_json),
+                                     "key": pkey, "task": fail.key,
+                                     "error": fail.error,
+                                     "attempts": fail.attempts})
+                    results[i] = SweepResult((spec, cfg), pkey, None, {},
+                                             cached=False, engine="failed",
+                                             error=fail.error)
+                    if lm is not None:
+                        lm.release(pkey)    # let a peer (or retry) try it
+            for i in idx_list:               # defensive: no task covered it
+                if i not in results:
+                    spec, cfg, spec_json, pkey = norm[i]
+                    failures.append({"label": spec_label(spec_json),
+                                     "key": pkey, "task": "?",
+                                     "error": "task lost", "attempts": 0})
+                    results[i] = SweepResult((spec, cfg), pkey, None, {},
+                                             cached=False, engine="failed",
+                                             error="task lost")
+
+        if lm is None:
+            _run_round(todo)
+        else:
+            if use_pool:
+                _pool_for_sweep()   # fork before the heartbeat thread starts
+            lm.start_heartbeat()
+            try:
+                claimed = [i for i in todo if lm.acquire(norm[i][3])]
+                claimed_set = set(claimed)
+                deferred = [i for i in todo if i not in claimed_set]
+                if claimed:
+                    _run_round(claimed)
+                waited = time.monotonic()
+                while deferred:
+                    lm.retune(sup.watchdog.deadline(floor=lm.ttl_floor))
+                    ready, still = [], []
+                    for i in deferred:
+                        pkey = norm[i][3]
+                        rec = store.get(pkey)
+                        if rec is not None:   # a peer drained it, durably
+                            spec, cfg, spec_json, _k = norm[i]
+                            results[i] = SweepResult(
+                                (spec, cfg), pkey,
+                                Stats.from_dict(rec["stats"]),
+                                rec["trace_meta"], cached=True,
+                                engine=rec.get("engine", "scalar"))
+                            LAST_ELASTIC["peer_served"] += 1
+                        elif lm.acquire(pkey):
+                            ready.append(i)   # free or expired: (re)claimed
+                        else:
+                            still.append(i)
+                    deferred = still
+                    if ready:
+                        # the rebalance: reclaimed points regroup into
+                        # fresh lane batches sized to what is left
+                        _run_round(ready)
+                        waited = time.monotonic()
+                    elif deferred:
+                        if time.monotonic() - waited > lease_wait:
+                            # starvation guard: a peer heartbeats but never
+                            # finishes; compute leaselessly (idempotent)
+                            _run_round(deferred)
+                            deferred = []
+                        else:
+                            time.sleep(lease_poll)
+            finally:
+                lm.stop()
+            LAST_ELASTIC["lease"] = lm.stats.to_dict()
+        LAST_REPORT = agg
         store.flush_index()
         if plan is not None:
             fault = plan.fire("simcache.index", "index", 0)
             if fault is not None:
                 chaos_mod.corrupt_record(store, "index", fault)
-
-        # quarantined points: structured report + placeholder results
-        lost = {fail.key: fail for fail in rep.failures}
-        for tkey2, fail in lost.items():
-            for i in owners.get(tkey2, []):
-                if i in results:
-                    continue
-                spec, cfg, spec_json, key = norm[i]
-                failures.append({"label": spec_label(spec_json), "key": key,
-                                 "task": fail.key, "error": fail.error,
-                                 "attempts": fail.attempts})
-                results[i] = SweepResult((spec, cfg), key, None, {},
-                                         cached=False, engine="failed",
-                                         error=fail.error)
-        for i in todo:                       # defensive: no task covered it
-            if i not in results:
-                spec, cfg, spec_json, key = norm[i]
-                failures.append({"label": spec_label(spec_json), "key": key,
-                                 "task": "?", "error": "task lost",
-                                 "attempts": 0})
-                results[i] = SweepResult((spec, cfg), key, None, {},
-                                         cached=False, engine="failed",
-                                         error="task lost")
+        if lm is not None:
+            # elastic barrier: fold every peer's shard files into the
+            # index, so a worker killed between put and flush cannot cost
+            # the store an index entry
+            store.rebuild_index()
         if failures and not allow_partial:
             raise SweepError(failures,
                              [results[i] for i in range(len(norm))])
+    if not failures:
+        jrnl.complete()     # grid fully durable: retire its resume state
     return [results[i] for i in range(len(norm))]
 
 

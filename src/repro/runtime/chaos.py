@@ -32,6 +32,11 @@ Sites currently wired (prefix-matched, so ``sweep.task`` covers both):
 ``sweep.task.scalar``   a scalar (golden-engine) sweep task / fallback point
 ``simcache.put``        a just-written result record, keyed by point key
 ``simcache.index``      the simcache ``index.json``
+``journal.append``      a just-written sweep-journal entry, keyed by point
+``lease.heartbeat``     one lease renewal, keyed by point, attempt = beat
+``service.point``       an elastic worker surviving one more completed
+                        point (``scripts/sweep_service.py``); ``crash``
+                        here is whole-worker loss mid-drain
 ``serve.backpressure``  request admission, keyed by request id
 ``serve.step``          one engine step, keyed by step ordinal
 ======================  ====================================================
@@ -54,7 +59,8 @@ KINDS = ("crash",         # kill the worker process (SIGKILL-like os._exit)
          "torn_write",    # truncate a just-written record (torn write)
          "lost_write",    # drop the record, leave a stray .tmp behind
          "drop_index",    # delete the store index
-         "backpressure")  # reject an admission
+         "backpressure",  # reject an admission
+         "skip")          # suppress the guarded action (lease heartbeats)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,18 +155,48 @@ PROFILES: dict[str, tuple[ChaosRule, ...]] = {
     # serving-side flakiness: rejected admissions + straggler steps
     "serveflaky": (ChaosRule("serve.backpressure", "backpressure", rate=0.2),
                    ChaosRule("serve.step", "delay", rate=0.3, seconds=0.5)),
+    # elastic-service drills (scripts/sweep_service.py + chaos_drill.py):
+    # whole workers are lost mid-drain — the worker hard-exits after some
+    # completed points (its durable progress survives; peers reclaim its
+    # leases) and a few pool tasks crash too.  The kill is keyed by point
+    # digest, and fires only on *computed* points, so a relaunched worker
+    # that resumes from journal + simcache never re-trips the same kill.
+    "workerloss": (ChaosRule("service.point", "crash", rate=0.15,
+                             first_attempt_only=False),
+                   ChaosRule("sweep.task", "crash", rate=0.15)),
+    # lease renewals are suppressed so in-flight leases expire and peers
+    # steal them: completion must survive duplicated (reclaimed) points
+    "leaseexpire": (ChaosRule("lease.heartbeat", "skip", rate=0.7,
+                              first_attempt_only=False),),
+    # journal entries are torn or lost as appended: replay must drop them
+    # (those points recompute or re-serve from the store) and the resumed
+    # count must stay honest; the index disappears too for good measure
+    "tornjournal": (ChaosRule("journal.append", "torn_write", rate=0.25),
+                    ChaosRule("journal.append", "lost_write", rate=0.15),
+                    ChaosRule("simcache.index", "drop_index", rate=1.0)),
 }
 
 
 def from_spec(spec: str) -> ChaosPlan:
-    """Parse ``<seed>:<profile>`` (the ``REPRO_CHAOS`` format)."""
+    """Parse ``<seed>:<profile>`` (the ``REPRO_CHAOS`` format).
+
+    Validation happens *here*, at parse time, with an error naming the
+    valid profiles — not deep inside the first plan lookup."""
     seed_s, _, profile = spec.partition(":")
     if not profile:
         profile, seed_s = seed_s, "0"
     if profile not in PROFILES:
-        raise ValueError(f"unknown chaos profile {profile!r}; "
-                         f"choose from {sorted(PROFILES)}")
-    return ChaosPlan(int(seed_s), profile, PROFILES[profile])
+        raise ValueError(
+            f"unknown chaos profile {profile!r} in spec {spec!r}; want "
+            f"'<seed>:<profile>' with profile one of {sorted(PROFILES)}")
+    try:
+        seed = int(seed_s)
+    except ValueError:
+        raise ValueError(
+            f"malformed chaos seed {seed_s!r} in spec {spec!r}; want "
+            f"'<seed>:<profile>' with an integer seed and profile one of "
+            f"{sorted(PROFILES)}") from None
+    return ChaosPlan(seed, profile, PROFILES[profile])
 
 
 def from_env() -> ChaosPlan | None:
@@ -200,10 +236,13 @@ def apply_task_fault(fault: Fault, *, in_worker: bool) -> None:
 def corrupt_record(store, key: str, fault: Fault) -> None:
     """Apply a storage fault to a just-written store record (parent-side).
 
-    ``torn_write`` truncates the record file mid-way (a crash during a
-    non-atomic write / bit rot); ``lost_write`` simulates dying between
-    the temp-file write and the atomic rename — the record vanishes and a
-    stray ``.tmp`` is left behind; ``drop_index`` deletes ``index.json``.
+    ``store`` is anything with ``path(key)`` and ``root`` — the
+    :class:`~repro.core.cgra.sweep.SimCache` or a
+    :class:`~repro.core.cgra.journal.SweepJournal`.  ``torn_write``
+    truncates the record file mid-way (a crash during a non-atomic write /
+    bit rot); ``lost_write`` simulates dying between the temp-file write
+    and the atomic rename — the record vanishes and a stray ``.tmp`` is
+    left behind; ``drop_index`` deletes ``index.json``.
     """
     path = store.path(key)
     if fault.kind == "torn_write":

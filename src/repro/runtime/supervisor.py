@@ -141,12 +141,20 @@ class TaskSupervisor:
         return self.watchdog.deadline(floor=self.min_deadline)
 
     # -- execution -----------------------------------------------------------
-    def run(self, tasks) -> SupervisorReport:
+    def run(self, tasks, on_result: Callable[[Task, Any], None] | None = None) \
+            -> SupervisorReport:
+        """Drain ``tasks``; ``on_result(task, result)`` fires in the calling
+        process as each task completes — the sweep uses it to make results
+        durable *incrementally* (simcache put + journal append), so a
+        ``kill -9`` of the coordinator loses at most the in-flight tasks.
+        A raising ``on_result`` counts as a failed attempt for that task
+        (the result is discarded and the task retried: recomputing a pure
+        task is always safe, a half-persisted result is not)."""
         rep = SupervisorReport()
         queue: collections.deque[Task] = collections.deque(tasks)
         pool = self._pool_factory() if self._pool_factory else None
         if pool is None:
-            self._run_inline(queue, rep)
+            self._run_inline(queue, rep, on_result)
             return rep
 
         inflight: dict = {}          # future -> (task, start_time)
@@ -175,9 +183,17 @@ class TaskSupervisor:
                 task, start = inflight.pop(fut)
                 err = fut.exception()
                 if err is None:
-                    rep.results[task.key] = fut.result()
-                    self.watchdog.record(len(rep.results),
-                                         time.monotonic() - start)
+                    out = fut.result()
+                    try:
+                        if on_result is not None:
+                            on_result(task, out)
+                    except Exception as e:
+                        self._fail(task, f"persist failed: "
+                                   f"{type(e).__name__}: {e}", rep, queue)
+                    else:
+                        rep.results[task.key] = out
+                        self.watchdog.record(len(rep.results),
+                                             time.monotonic() - start)
                 elif isinstance(err, BrokenProcessPool):
                     broke = True
                     self._fail(task, f"worker crashed: {err}", rep, queue)
@@ -235,7 +251,8 @@ class TaskSupervisor:
             pass
         return self._pool_rebuild() if self._pool_rebuild else None
 
-    def _run_inline(self, queue: collections.deque, rep: SupervisorReport) \
+    def _run_inline(self, queue: collections.deque, rep: SupervisorReport,
+                    on_result: Callable[[Task, Any], None] | None = None) \
             -> None:
         while queue:
             task = queue.popleft()
@@ -244,7 +261,10 @@ class TaskSupervisor:
                 time.sleep(delay)
             t0 = time.monotonic()
             try:
-                rep.results[task.key] = task.fn(task.payload, task.attempts)
+                out = task.fn(task.payload, task.attempts)
+                if on_result is not None:
+                    on_result(task, out)
+                rep.results[task.key] = out
                 self.watchdog.record(len(rep.results),
                                      time.monotonic() - t0)
             except Exception as e:

@@ -115,3 +115,26 @@ def test_profiles_are_well_formed():
         plan = chaos.ChaosPlan(1, name, rules)
         blob = json.loads(plan.to_json())
         assert blob["profile"] == name and blob["rules"]
+
+def test_from_spec_error_lists_valid_profiles():
+    """Misconfiguration surfaces at parse time, naming every valid
+    profile — not deep inside the first sweep that consults the plan."""
+    with pytest.raises(ValueError) as ei:
+        chaos.from_spec("1:nosuch")
+    for name in chaos.PROFILES:
+        assert name in str(ei.value)
+    with pytest.raises(ValueError, match="malformed chaos seed"):
+        chaos.from_spec("notanumber:workercrash")
+    with pytest.raises(ValueError, match="unknown chaos profile"):
+        chaos.from_spec("")
+
+
+def test_elastic_profiles_registered_and_typed():
+    for name in ("workerloss", "leaseexpire", "tornjournal"):
+        assert all(r.kind in chaos.KINDS for r in chaos.PROFILES[name])
+    assert any(r.site == "service.point" and r.kind == "crash"
+               for r in chaos.PROFILES["workerloss"])
+    assert any(r.site == "lease.heartbeat" and r.kind == "skip"
+               for r in chaos.PROFILES["leaseexpire"])
+    assert any(r.site == "journal.append"
+               for r in chaos.PROFILES["tornjournal"])

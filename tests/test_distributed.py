@@ -12,6 +12,7 @@ CHECKS = [
     "checkpoint_roundtrip",
     "crash_resume_bitwise",
     "elastic_reshard",
+    "reshard_roundtrip",
     "grad_compression_convergence",
     "straggler_watchdog",
     "runahead_loader",

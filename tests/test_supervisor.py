@@ -173,3 +173,56 @@ def test_adaptive_deadline_uses_watchdog_median():
     assert sup._deadline() == pytest.approx(4.0)  # 4x median of window
     fixed = supervisor.TaskSupervisor(deadline=2.5, watchdog=wd)
     assert fixed._deadline() == 2.5
+
+
+# ---------------------------------------------------------------------------
+# on_result: incremental durability hook
+# ---------------------------------------------------------------------------
+
+def test_on_result_fires_per_completion_inline():
+    seen = []
+    sup = supervisor.TaskSupervisor(backoff_base=0.001)
+    rep = sup.run(_tasks(4), on_result=lambda t, out: seen.append((t.key, out)))
+    assert rep.ok()
+    assert sorted(seen) == [(f"k{i}", i) for i in range(4)]
+
+
+def test_on_result_fires_per_completion_pooled():
+    seen = []
+    pool = _mk_pool()
+    try:
+        sup = supervisor.TaskSupervisor(pool_factory=lambda: pool,
+                                        backoff_base=0.001)
+        rep = sup.run(_tasks(5), on_result=lambda t, out: seen.append(out))
+        assert rep.ok() and sorted(seen) == list(range(5))
+    finally:
+        pool.shutdown()
+
+
+def test_raising_on_result_counts_as_failed_attempt_and_retries():
+    """A persist failure discards the result and retries the task:
+    recomputing a pure task is safe, a half-persisted result is not."""
+    calls = collections.Counter()
+
+    def persist(task, out):
+        calls[task.key] += 1
+        if calls[task.key] == 1:
+            raise OSError("disk full")
+
+    sup = supervisor.TaskSupervisor(backoff_base=0.001)
+    rep = sup.run(_tasks(3), on_result=persist)
+    assert rep.ok() and len(rep.results) == 3
+    assert rep.retries == 3                   # one persist retry per task
+    assert all(n == 2 for n in calls.values())
+
+
+def test_persistently_failing_on_result_quarantines():
+    def persist(task, out):
+        raise OSError("read-only store")
+
+    sup = supervisor.TaskSupervisor(max_attempts=2, backoff_base=0.001)
+    rep = sup.run(_tasks(2), on_result=persist)
+    assert not rep.ok() and len(rep.failures) == 2
+    assert all("persist failed" in f.error or "OSError" in f.error
+               for f in rep.failures)
+    assert rep.results == {}                  # nothing reported as durable

@@ -470,3 +470,72 @@ def test_chaos_env_spec_reaches_sweep(tmp_path, monkeypatch):
                    store=sw.SimCache(tmp_path), workers=0)
     assert res[0].engine == "scalar"          # degraded via env-driven plan
     assert _observed(res[0].stats) == GOLDEN[("radix_hist_4k", "cache_spm")]
+
+
+# ---------------------------------------------------------------------------
+# Index flush under concurrent writers (merge-on-flush)
+# ---------------------------------------------------------------------------
+
+def _rec(i=0):
+    return {"kind": "sim", "trace": {"kernel": "radix_hist"}, "cfg": {},
+            "stats": {"cycles": i}, "trace_meta": {}}
+
+
+def test_flush_index_merges_peer_entries(tmp_path):
+    """Two store instances flushing the same root must not drop each
+    other's entries: the flush re-reads the on-disk index and unions it
+    with the local view (the old read-modify-write race lost whichever
+    writer flushed first)."""
+    k1, k2 = "a" * 64, "b" * 64
+    a, b = sw.SimCache(tmp_path), sw.SimCache(tmp_path)
+    b._load_index()                   # b's view predates a's write
+    a.put(k1, _rec(1))
+    b.put(k2, _rec(2))                # flushes a view that never saw k1
+    idx = json.loads((tmp_path / "index.json").read_text())
+    assert set(idx["entries"]) == {k1, k2}
+    # ...but entries whose shard files are gone are dropped on merge
+    sw.SimCache(tmp_path).path(k1).unlink()
+    b.flush_index()
+    idx = json.loads((tmp_path / "index.json").read_text())
+    assert set(idx["entries"]) == {k2}
+
+
+def test_flush_index_breaks_stale_lock_and_degrades(tmp_path):
+    """A crashed flusher's leftover index.lock must not wedge the store:
+    young locks serialize, stale locks are broken."""
+    store = sw.SimCache(tmp_path)
+    store.put("c" * 64, _rec())
+    lock = tmp_path / "index.lock"
+    lock.write_text("")
+    old = lock.stat().st_mtime - 60
+    os.utime(lock, (old, old))                  # stale: gets broken
+    store.put("d" * 64, _rec())
+    idx = json.loads((tmp_path / "index.json").read_text())
+    assert set(idx["entries"]) == {"c" * 64, "d" * 64}
+    assert not lock.exists()
+
+
+def test_flush_index_two_process_stress(tmp_path):
+    """Two real processes interleave put+flush on one root; the advisory
+    index must end up with every entry (zero lost to the race)."""
+    script = (
+        "import hashlib, sys\n"
+        "from repro.core.cgra import sweep as sw\n"
+        "root, wid = sys.argv[1], sys.argv[2]\n"
+        "store = sw.SimCache(root)\n"
+        "for i in range(25):\n"
+        "    key = hashlib.sha256(f'{wid}:{i}'.encode()).hexdigest()\n"
+        "    store.put(key, {'kind': 'sim', 'trace': {'kernel': 'x'},\n"
+        "                    'cfg': {}, 'stats': {'cycles': i},\n"
+        "                    'trace_meta': {}})\n"
+    )
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    procs = [subprocess.Popen([sys.executable, "-c", script,
+                               str(tmp_path), wid], env=env)
+             for wid in ("w0", "w1")]
+    assert [p.wait(timeout=300) for p in procs] == [0, 0]
+    idx = json.loads((tmp_path / "index.json").read_text())
+    assert len(idx["entries"]) == 50            # nothing lost
